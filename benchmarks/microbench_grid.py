@@ -1,0 +1,63 @@
+"""Fig. 4 reproduction: Read/Write/Update microbenchmarks over the
+(parallelism x memory) grid — maximum sustainable rate per configuration.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.data.nexmark import BidGen
+from repro.streaming.engine import StreamEngine
+from repro.streaming.graph import Dataflow
+from repro.streaming.operators import KeyedStateOp, SinkOp, SourceOp
+
+TARGETS = {"read": 50_000, "write": 50_000, "update": 30_000}
+GRID = [(1, 128), (1, 256), (1, 512), (1, 1024), (1, 2048),
+        (2, 256), (2, 512), (2, 1024),
+        (4, 128), (4, 256), (4, 512), (4, 1024), (4, 2048),
+        (8, 128), (8, 256), (8, 512), (8, 1024)]
+
+
+def run_point(mode: str, p: int, mem_mb: float, *, seconds: float = 15,
+              keyspace: int = 1_000_000, seed: int = 1) -> dict:
+    flow = Dataflow("micro")
+    op = KeyedStateOp("state_op", mode, keyspace=keyspace)
+    flow.chain(SourceOp("source", BidGen(seed=seed)), op, SinkOp("sink"))
+    flow.nodes["state_op"].parallelism = p
+    eng = StreamEngine(flow, base_mem_mb=mem_mb, seed=seed)
+    eng.run(seconds, TARGETS[mode])
+    m = eng.collect()
+    s = m["state_op"]
+    return {"mode": mode, "p": p, "mem_mb": mem_mb,
+            "rate": m["sink"]["rate_in"], "target": TARGETS[mode],
+            "sustained": m["sink"]["rate_in"] >= 0.98 * TARGETS[mode],
+            "theta": s["theta"], "tau_ms": s["tau_ms"],
+            "busyness": s["busyness"]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--modes", nargs="*", default=["read", "write", "update"])
+    ap.add_argument("--quick", action="store_true",
+                    help="subset of the grid + shorter windows")
+    ap.add_argument("--out", default="benchmarks/microbench_results.json")
+    args = ap.parse_args()
+    grid = [(1, 128), (4, 512), (4, 1024), (8, 256), (8, 512)] \
+        if args.quick else GRID
+    seconds = 8 if args.quick else 15
+    rows = []
+    for mode in args.modes:
+        for p, mem in grid:
+            r = run_point(mode, p, mem, seconds=seconds)
+            rows.append(r)
+            th = r["theta"] if r["theta"] is not None else -1
+            print(f"{mode:6s} ({p};{mem:5.0f}) rate={r['rate']:9,.0f} "
+                  f"target={r['target']:,} sustained={r['sustained']} "
+                  f"theta={th:.2f} tau={r['tau_ms'] or 0:.3f}ms", flush=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Fig. 5 reproduction: Justin vs DS2 elastic scaling on Nexmark.
+
+For each query: steps to converge, achieved rate vs target, final CPU cores
+and memory MB, plus the per-window history (capacity/CPU/mem over time —
+the Fig. 5 curves) dumped to JSON.
+
+``max_level=2`` reproduces the paper's observed trajectories (operators cap
+at one scale-up, final configs (p, 316 MB)); the Algorithm-1-literal
+``max_level=3`` ablation is also recorded.  See EXPERIMENTS.md §Nexmark.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.core.controller import AutoScaler, ControllerConfig
+from repro.core.justin import JustinParams
+from repro.data.nexmark import QUERIES, TARGET_RATES
+from repro.streaming.engine import StreamEngine
+
+
+def evaluate(queries=None, *, max_level: int = 2, seed: int = 3,
+             verbose: bool = True) -> dict:
+    queries = queries or list(QUERIES)
+    out: dict = {"max_level": max_level, "queries": {}}
+    for qname in queries:
+        row = {}
+        for policy in ("ds2", "justin"):
+            t0 = time.time()
+            flow = QUERIES[qname]()
+            eng = StreamEngine(flow, seed=seed)
+            ctl = AutoScaler(eng, TARGET_RATES[qname], ControllerConfig(
+                policy=policy, justin=JustinParams(max_level=max_level)))
+            hist = ctl.run()
+            s = ctl.summary()
+            s["wall_s"] = round(time.time() - t0, 1)
+            s["history"] = [dataclasses.asdict(h) for h in hist]
+            row[policy] = s
+            if verbose:
+                print(f"{qname:4s} {policy:6s} steps={s['steps']} "
+                      f"rate={s['achieved_rate']:,.0f}/{s['target']:,} "
+                      f"cpu={s['cpu_cores']} mem={s['memory_mb']:,.0f}MB "
+                      f"({s['wall_s']}s)", flush=True)
+        d, j = row["ds2"], row["justin"]
+        row["cpu_saving"] = 1 - j["cpu_cores"] / d["cpu_cores"]
+        row["mem_saving"] = 1 - j["memory_mb"] / d["memory_mb"]
+        row["steps_justin_vs_ds2"] = (j["steps"], d["steps"])
+        if verbose:
+            print(f"  -> CPU saving {row['cpu_saving']:.0%}  "
+                  f"MEM saving {row['mem_saving']:.0%}  "
+                  f"steps {j['steps']} vs {d['steps']}", flush=True)
+        out["queries"][qname] = row
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", nargs="*", default=None)
+    ap.add_argument("--max-level", type=int, default=2)
+    ap.add_argument("--out", default="benchmarks/nexmark_results.json")
+    args = ap.parse_args()
+    res = evaluate(args.queries, max_level=args.max_level)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=1, default=float)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

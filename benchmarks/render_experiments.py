@@ -1,0 +1,101 @@
+"""Render the result tables into EXPERIMENTS.md from benchmarks/*.json.
+
+  PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+from __future__ import annotations
+
+import json
+import os
+
+B = os.path.dirname(os.path.abspath(__file__))
+
+
+def _load(name):
+    p = os.path.join(B, name)
+    return json.load(open(p)) if os.path.exists(p) else None
+
+
+def roofline_table() -> str:
+    recs = _load("roofline_results.json") or []
+    out = ["| arch | shape | compute | memory | collective | bound | "
+           "useful | roofline |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if "error" in r:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.1f} ms | "
+            f"{r['t_memory_s']*1e3:.1f} ms | {r['t_collective_s']*1e3:.1f} ms "
+            f"| {r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def nexmark_table() -> str:
+    nx = _load("nexmark_results.json")
+    if not nx:
+        return "(pending)"
+    out = ["| query | policy | steps | rate | cpu | mem MB | final config |",
+           "|---|---|---|---|---|---|---|"]
+    for q, row in nx["queries"].items():
+        for pol in ("ds2", "justin"):
+            s = row[pol]
+            cfg = {k: tuple(v) for k, v in s["config"].items()
+                   if k != "source"}
+            out.append(f"| {q} | {pol} | {s['steps']} | "
+                       f"{s['achieved_rate']:,.0f} | {s['cpu_cores']} | "
+                       f"{s['memory_mb']:,.0f} | `{cfg}` |")
+        out.append(f"| {q} | **Δ justin** | {row['steps_justin_vs_ds2']} | | "
+                   f"**-{row['cpu_saving']:.0%}** | "
+                   f"**-{row['mem_saving']:.0%}** | |")
+    return "\n".join(out)
+
+
+def microbench_table() -> str:
+    rows = _load("microbench_results.json") or []
+    out = ["| mode | (p; mem MB) | rate | sustained | θ | τ ms |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        th = f"{r['theta']:.2f}" if r["theta"] is not None else "—"
+        out.append(f"| {r['mode']} | ({r['p']}; {r['mem_mb']:.0f}) | "
+                   f"{r['rate']:,.0f} | {'✓' if r['sustained'] else '✗'} | "
+                   f"{th} | {r['tau_ms'] or 0:.3f} |")
+    return "\n".join(out)
+
+
+def hillclimb_table() -> str:
+    rows = (_load("hillclimb_results.json") or []) \
+        + (_load("hillclimb_B.json") or []) + (_load("hillclimb_C.json") or [])
+    out = ["| iter | arch × shape | compute | memory | collective | bound | "
+           "roofline | hypothesis |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "error" in r:
+            out.append(f"| {r['iteration']} | | | | | | FAILED | "
+                       f"{r.get('hypothesis','')} |")
+            continue
+        out.append(
+            f"| {r['iteration']} | {r['arch']} × {r['shape']} | "
+            f"{r['t_compute_s']*1e3:.1f} ms | {r['t_memory_s']*1e3:.1f} ms | "
+            f"{r['t_collective_s']*1e3:.1f} ms | {r['bottleneck']} | "
+            f"{r['roofline_fraction']:.3f} | {r['hypothesis'][:90]} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    path = os.path.join(os.path.dirname(B), "EXPERIMENTS.md")
+    text = open(path).read()
+    for marker, content in [
+        ("<!-- ROOFLINE_TABLE -->", roofline_table()),
+        ("<!-- NEXMARK_TABLE -->", nexmark_table()),
+        ("<!-- MICROBENCH_TABLE -->", microbench_table()),
+        ("<!-- PERF_TABLE -->", hillclimb_table()),
+    ]:
+        if marker in text:
+            text = text.replace(marker, content)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,249 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ must precede any jax import (the roofline lowers on the production mesh).
+
+"""Roofline analysis per (arch x shape) on the single-pod mesh.
+
+Methodology (EXPERIMENTS.md §Roofline):
+  * XLA's cost_analysis counts a ``scan`` body ONCE regardless of trip count
+    (verified experimentally), so per-cell FLOPs/bytes/collective-bytes are
+    obtained by lowering two reduced-depth variants (L1, L2 layers at FULL
+    width/batch) and extrapolating linearly to the real depth:
+        f(L) = f(L1) + (L - L1) / (L2 - L1) * (f(L2) - f(L1))
+    Every L-dependent cost is linear in L (scan trips + stacked-leaf ops),
+    so the extrapolation is exact up to constant folding noise.
+  * memory figures (peak bytes/device) come from the full-depth compile —
+    the same artifact the dry-run validates.
+  * Roofline terms (TPU v5e): compute = FLOPs/dev / 197e12,
+    memory = bytes/dev / 819e9, collective = coll-bytes/dev / 50e9.
+
+Outputs benchmarks/roofline_results.json + a markdown table on stdout.
+"""
+import argparse
+import json
+import math
+
+import jax
+
+from repro.configs import applicable_shapes, get_config, get_shape, list_archs
+from repro.launch.dryrun import collective_bytes_from_text, lower_cell
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.sharding import MeshCtx
+
+
+def depth_variants(cfg: ArchConfig) -> tuple[ArchConfig, ArchConfig, float]:
+    """Two reduced-depth FULL-WIDTH *unrolled* configs + the extrapolation
+    multiplier ((L_full - L1)/(L2 - L1) applied to the delta).  Unrolling
+    (scan_layers=False) makes per-layer costs explicit in the HLO, since XLA
+    counts a scan body once regardless of trip count."""
+    cfg = cfg.replace(scan_layers=False)
+    # depth pairs start at >=2 layers: the 1-layer compile can specialize
+    # one-time reshards differently, which would poison the delta
+    if cfg.family == "hybrid":
+        plen = len(cfg.block_pattern)
+        tail = cfg.num_layers % plen
+        l1, l2 = 2 * plen + tail, 3 * plen + tail
+        steps_full = cfg.num_layers // plen
+        return (cfg.replace(num_layers=l1), cfg.replace(num_layers=l2),
+                float(steps_full - 2))
+    if cfg.family == "encdec":
+        return (cfg.replace(num_layers=2, enc_layers=2),
+                cfg.replace(num_layers=4, enc_layers=4),
+                float((cfg.num_layers - 2) / 2))
+    if cfg.num_experts and cfg.moe_period > 1:
+        p = cfg.moe_period
+        return (cfg.replace(num_layers=2 * p), cfg.replace(num_layers=4 * p),
+                float((cfg.num_layers // p - 2) / 2))
+    return (cfg.replace(num_layers=2), cfg.replace(num_layers=4),
+            float((cfg.num_layers - 2) / 2))
+
+
+def cost_of(cfg, shape, mctx) -> dict:
+    lowered, _ = lower_cell(cfg, shape, mctx)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_text(compiled.as_text())
+    mem = compiled.memory_analysis()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(sum(coll.values())),
+        "coll_by_op": coll,
+        "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0)),
+    }
+
+
+def model_flops_per_device(cfg: ArchConfig, shape: ShapeConfig,
+                           n_dev: int) -> float:
+    """Analytic useful FLOPs (6ND train / 2ND inference + attention term)."""
+    # active params ~ sum of per-layer matmul params actually used per token
+    d, hd = cfg.d_model, cfg.head_dim
+    per_layer = 0
+    if cfg.num_heads:
+        per_layer += d * (cfg.num_heads + 2 * cfg.num_kv_heads) * hd \
+            + cfg.num_heads * hd * d
+    if cfg.family == "ssm":
+        d_in = cfg.d_inner
+        per_layer += d * (2 * d_in + 2 * cfg.ssm_state + cfg.ssm_nheads) \
+            + d_in * d
+    elif cfg.family == "hybrid":
+        plen = len(cfg.block_pattern)
+        rec_frac = cfg.block_pattern.count("rec") / plen
+        r = cfg.lru_width
+        rec = 2 * d * r + 2 * r * r + r * d + 3 * d * cfg.d_ff
+        att = (d * (cfg.num_heads + 2 * cfg.num_kv_heads) * hd
+               + cfg.num_heads * hd * d + 3 * d * cfg.d_ff)
+        per_layer = rec_frac * rec + (1 - rec_frac) * att
+    elif cfg.num_experts:
+        dense_ffn = 3 * d * cfg.d_ff
+        moe_ffn = cfg.top_k * 3 * d * cfg.d_ff \
+            + (3 * d * cfg.d_ff if cfg.shared_expert else 0)
+        frac_moe = 1.0 / cfg.moe_period
+        per_layer += (1 - frac_moe) * dense_ffn + frac_moe * moe_ffn
+    else:
+        per_layer += 3 * d * cfg.d_ff
+    n_layers = cfg.num_layers + (cfg.enc_layers or 0)
+    n_active = per_layer * n_layers + d * cfg.padded_vocab  # + unembed
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    flops = mult * n_active * tokens
+    # attention context term: fwd = 4*H*hd*tokens*ctx_avg (qk + pv matmuls);
+    # causal averages ctx/2; train multiplies by 3 (fwd + bwd)
+    if cfg.num_heads:
+        ctx = shape.seq_len
+        if cfg.window:
+            ctx = min(ctx, cfg.window)
+        if cfg.chunk_attn:
+            ctx = min(ctx, cfg.chunk_attn)
+        ctx_avg = ctx if shape.kind == "decode" else ctx / 2
+        att = 4 * cfg.num_heads * hd * tokens * ctx_avg * cfg.num_layers
+        if cfg.family == "encdec":   # enc self (bidir, enc_seq) + cross
+            att = 4 * cfg.num_heads * hd * tokens * ctx_avg * cfg.num_layers
+            att += 4 * cfg.num_heads * hd * tokens * cfg.enc_seq \
+                * cfg.num_layers
+            enc_tokens = shape.global_batch * cfg.enc_seq
+            att += 4 * cfg.num_heads * hd * enc_tokens * cfg.enc_seq \
+                * cfg.enc_layers
+        if shape.kind == "train":
+            att *= 3
+        flops += att
+    return flops / n_dev
+
+
+def model_bytes_per_device(cfg: ArchConfig, shape: ShapeConfig,
+                           n_dev: int) -> float:
+    """Ideal HBM traffic: weights once + cache once + activations floor."""
+    from repro.models.model import get_model
+    import numpy as np
+    model = get_model(cfg)
+    shapes = model.param_shapes(cfg)
+    pbytes = sum(int(np.prod(s)) for s in jax.tree.leaves(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))) \
+        * (2 if cfg.param_dtype == "bfloat16" else 4)
+    total = float(pbytes)
+    if shape.kind == "train":
+        total *= 4.0          # params + grads + m + v round trip
+    if shape.kind == "decode":
+        cshapes = model.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+        total += 2.0 * sum(int(np.prod(s)) for s in jax.tree.leaves(
+            cshapes, is_leaf=lambda x: isinstance(x, tuple))) * 2
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    total += tokens * cfg.d_model * 2 * 4      # activation floor
+    return total / n_dev
+
+
+def analyze_cell(arch: str, shape_name: str, mctx,
+                 cfg_override: ArchConfig | None = None) -> dict:
+    cfg = cfg_override or get_config(arch)
+    shape = get_shape(shape_name)
+    c1_cfg, c2_cfg, mult = depth_variants(cfg)
+    with mctx.mesh:
+        c1 = cost_of(c1_cfg, shape, mctx)
+        c2 = cost_of(c2_cfg, shape, mctx)
+        cf = cost_of(cfg, shape, mctx)
+    n_dev = mctx.mesh.devices.size
+    rec: dict = {"arch": arch, "shape": shape_name, "n_devices": n_dev}
+    for key in ("flops", "bytes", "coll"):
+        # clamp: SPMD occasionally specializes the shallow pair differently;
+        # a negative per-layer delta is compile noise, not a real saving
+        rec[key] = c1[key] + mult * max(c2[key] - c1[key], 0.0)
+    rec["peak_bytes"] = cf["peak_bytes"]
+    rec["coll_by_op"] = {k: c1["coll_by_op"].get(k, 0.0)
+                         + mult * (c2["coll_by_op"].get(k, 0.0)
+                                   - c1["coll_by_op"].get(k, 0.0))
+                         for k in set(c1["coll_by_op"]) | set(c2["coll_by_op"])}
+    rec["t_compute_s"] = rec["flops"] / PEAK_FLOPS_BF16
+    rec["t_memory_s"] = rec["bytes"] / HBM_BW
+    rec["t_collective_s"] = rec["coll"] / ICI_BW
+    terms = {"compute": rec["t_compute_s"], "memory": rec["t_memory_s"],
+             "collective": rec["t_collective_s"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    base_cfg, base_shape = get_config(arch), get_shape(shape_name)
+    rec["model_flops"] = model_flops_per_device(base_cfg, base_shape, n_dev)
+    rec["model_bytes"] = model_bytes_per_device(base_cfg, base_shape, n_dev)
+    rec["useful_ratio"] = rec["model_flops"] / max(rec["flops"], 1.0)
+    # ideal step time given the algorithm's intrinsic flops/bytes; the
+    # roofline fraction is ideal/bound — 1.0 means the compiled program
+    # does no work beyond the algorithm's floor on the binding resource.
+    t_ideal = max(rec["model_flops"] / PEAK_FLOPS_BF16,
+                  rec["model_bytes"] / HBM_BW)
+    bound = max(max(terms.values()), 1e-12)
+    rec["t_ideal_s"] = t_ideal
+    rec["roofline_fraction"] = min(1.0, t_ideal / bound)
+    return rec
+
+
+SUGGEST = {
+    "compute": "reduce recompute (remat policy) / pad-waste in attention "
+               "head sharding",
+    "memory": "fuse/relayout to cut HBM traffic; larger attention blocks; "
+              "bf16 intermediates",
+    "collective": "reshard to cut all-gather volume (FSDP axis choice), "
+                  "overlap collectives with compute, int8 gradient sync",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="benchmarks/roofline_results.json")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=False)
+    mctx = MeshCtx(mesh)
+    cells = []
+    if args.arch:
+        shapes = [args.shape] if args.shape else applicable_shapes(
+            get_config(args.arch))
+        cells = [(args.arch, s) for s in shapes]
+    else:
+        for arch in list_archs():
+            for s in applicable_shapes(get_config(arch)):
+                cells.append((arch, s))
+
+    records = []
+    for arch, s in cells:
+        try:
+            rec = analyze_cell(arch, s, mctx)
+            records.append(rec)
+            print(f"{arch:26s} {s:12s} comp={rec['t_compute_s']*1e3:8.2f}ms "
+                  f"mem={rec['t_memory_s']*1e3:8.2f}ms "
+                  f"coll={rec['t_collective_s']*1e3:8.2f}ms "
+                  f"bound={rec['bottleneck']:10s} "
+                  f"useful={rec['useful_ratio']:.2f} "
+                  f"roofline={rec['roofline_fraction']:.2f}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{arch} {s} FAILED: {type(e).__name__}: {e}", flush=True)
+            records.append({"arch": arch, "shape": s, "error": str(e)})
+    with open(args.out, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

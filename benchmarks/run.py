@@ -1,0 +1,126 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Runs the QUICK variants so the
+whole suite finishes in minutes; the full grids live in microbench_grid.py /
+nexmark_eval.py / roofline.py (see EXPERIMENTS.md for full-run outputs).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_fig4_microbench() -> None:
+    """Paper Fig. 4: memory/parallelism grid (quick subset)."""
+    from benchmarks.microbench_grid import run_point
+    for mode, p, mem in [("read", 1, 128), ("read", 4, 1024),
+                         ("read", 8, 512), ("write", 4, 512),
+                         ("update", 8, 512)]:
+        t0 = time.time()
+        r = run_point(mode, p, mem, seconds=6)
+        us = (time.time() - t0) * 1e6
+        _row(f"fig4_{mode}_p{p}_m{mem}", us,
+             f"rate={r['rate']:.0f};sustained={r['sustained']};"
+             f"theta={r['theta'] if r['theta'] is not None else ''}")
+
+
+def bench_fig5_nexmark() -> None:
+    """Paper Fig. 5 / §5.1: Justin vs DS2 (q11 + q1, quick)."""
+    from benchmarks.nexmark_eval import evaluate
+    t0 = time.time()
+    res = evaluate(["q1", "q11"], max_level=2, verbose=False)
+    us = (time.time() - t0) * 1e6
+    for q, row in res["queries"].items():
+        _row(f"fig5_{q}", us / len(res["queries"]),
+             f"cpu_saving={row['cpu_saving']:.2f};"
+             f"mem_saving={row['mem_saving']:.2f};"
+             f"steps={row['steps_justin_vs_ds2']}")
+
+
+def bench_justinserve() -> None:
+    """Beyond-paper: hybrid LLM-serving elasticity."""
+    from benchmarks.justinserve_bench import evaluate
+    t0 = time.time()
+    res = evaluate(verbose=False)
+    us = (time.time() - t0) * 1e6
+    _row("justinserve", us,
+         f"replica_saving={res['replica_saving']:.2f};"
+         f"justin_replicas={res['justin']['replicas']};"
+         f"ds2_replicas={res['ds2']['replicas']}")
+
+
+def bench_kernels() -> None:
+    """Pallas kernels vs pure-jnp oracles (interpret mode, correctness +
+    per-call wall time on this CPU host)."""
+    import numpy as np
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+
+    from repro.kernels.sorted_probe.ops import probe
+    table = jnp.asarray(np.unique(rng.integers(0, 1 << 20, 4096))
+                        .astype(np.int32))
+    queries = jnp.asarray(rng.integers(0, 1 << 20, 1024).astype(np.int32))
+    p1, f1 = probe(table, queries)
+    t0 = time.time()
+    p1, f1 = probe(table, queries)
+    p2, f2 = probe(table, queries, impl="ref")
+    _row("kernel_sorted_probe", (time.time() - t0) * 1e6,
+         f"match={bool((p1 == p2).all() and (f1 == f2).all())}")
+
+    from repro.kernels.window_agg.ops import aggregate
+    seg = jnp.asarray(rng.integers(0, 512, 2048), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(2048, 4)), jnp.float32)
+    s1, c1 = aggregate(seg, vals, 512)
+    t0 = time.time()
+    s1, c1 = aggregate(seg, vals, 512)
+    s2, c2 = aggregate(seg, vals, 512, impl="ref")
+    _row("kernel_window_agg", (time.time() - t0) * 1e6,
+         f"allclose={bool(jnp.allclose(s1, s2, atol=1e-3))}")
+
+    from repro.kernels.flash_attn.ops import attention
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    o1 = attention(q, k, v)
+    t0 = time.time()
+    o1 = attention(q, k, v)
+    o2 = attention(q, k, v, impl="ref")
+    _row("kernel_flash_attn", (time.time() - t0) * 1e6,
+         f"maxerr={float(jnp.max(jnp.abs(o1 - o2))):.2e}")
+
+    from repro.kernels.decode_attn.ops import decode
+    qd = jnp.asarray(rng.normal(size=(2, 4, 64)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(2, 2, 512, 64)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(2, 2, 512, 64)), jnp.float32)
+    o1 = decode(qd, kc, vc, 512)
+    t0 = time.time()
+    o1 = decode(qd, kc, vc, 512)
+    o2 = decode(qd, kc, vc, 512, impl="ref")
+    _row("kernel_decode_attn", (time.time() - t0) * 1e6,
+         f"maxerr={float(jnp.max(jnp.abs(o1 - o2))):.2e}")
+
+
+def bench_train_smoke() -> None:
+    """End-to-end reduced training step timing per arch family."""
+    from repro.launch.train import train
+    for arch in ("llama3.2-3b", "mamba2-130m", "mixtral-8x7b"):
+        t0 = time.time()
+        r = train(arch, steps=4, verbose=False)
+        _row(f"train_{arch}", (time.time() - t0) * 1e6 / 4,
+             f"final_loss={r['final_loss']:.3f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, fn in list(globals().items()):
+        if name.startswith("bench_") and (only is None or only in name):
+            fn()
+
+
+if __name__ == "__main__":
+    main()

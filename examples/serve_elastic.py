@@ -1,0 +1,20 @@
+"""JustinServe demo (beyond-paper): Algorithm 1 arbitrating LLM-serving
+replica count vs per-replica prefix-cache HBM budget.
+
+Run:  PYTHONPATH=src python examples/serve_elastic.py
+"""
+from repro.serve.engine import JustinServeController
+
+TARGET_RPS = 120
+
+for policy in ("ds2", "justin"):
+    ctl = JustinServeController(TARGET_RPS, policy=policy)
+    res = ctl.autoscale()
+    print(f"{policy:6s}: replicas={res['replicas']} "
+          f"cache-level={res['level']} busy={res['busyness']:.2f} "
+          f"prefix-hit-rate={res['theta']:.2f} "
+          f"hbm-cache={res['hbm_cache_gb']:.1f} GB")
+    for h in ctl.history:
+        print(f"    window: replicas={h['replicas']} level={h['level']} "
+              f"busy={h['busyness']:.2f} theta={h['theta']:.2f} "
+              f"tau={h['tau_ms']:.2f}ms")

@@ -1,0 +1,120 @@
+"""Reconfiguration controller: the auto-scaler loop (§5 protocol).
+
+Runs the engine in decision windows; on a trigger computes DS2 (and, in
+"justin" mode, Algorithm 1 over it), enacts the new configuration via the
+engine (state re-partition / backend resize) and the bin-packing placement,
+then waits a stabilization period.  History rows capture what Fig. 5 plots:
+achieved rate, CPU cores, memory MB, per step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.ds2 import ds2_parallelism, should_trigger
+from repro.core.justin import (JustinParams, JustinState, OperatorDecision,
+                               commit, justin_policy)
+from repro.core.placement import TMSpec, placement_for_config
+from repro.streaming.engine import StreamEngine
+
+
+@dataclass(frozen=True)
+class ControllerConfig:
+    policy: str = "justin"                 # "justin" | "ds2"
+    decision_window_s: float = 120.0
+    stabilization_s: float = 60.0
+    busy_high: float = 0.8
+    target_busyness: float = 0.8
+    max_parallelism: int = 64
+    max_reconfigs: int = 8
+    justin: JustinParams = field(default_factory=JustinParams)
+    base_mem_mb: float = 158.0
+    sim_time_scale: float = 0.1            # 1 sim tick = 10 paper-seconds
+
+
+@dataclass
+class HistoryRow:
+    t: float
+    step: int
+    achieved_rate: float
+    cpu_cores: int
+    memory_mb: float
+    config: dict
+    triggered: bool
+
+
+class AutoScaler:
+    def __init__(self, engine: StreamEngine, target_rate: float,
+                 cfg: ControllerConfig = ControllerConfig()):
+        self.engine = engine
+        self.flow = engine.flow
+        self.target = target_rate
+        self.cfg = cfg
+        self.jstate = JustinState()
+        self.history: list[HistoryRow] = []
+        self.steps = 0
+
+    # ------------------------------------------------------------------ core
+    def _window_s(self) -> float:
+        return self.cfg.decision_window_s * self.cfg.sim_time_scale
+
+    def decide(self, metrics: dict[str, dict]) -> dict[str, tuple[int, int | None]]:
+        ds2_p = ds2_parallelism(self.flow, metrics, self.target,
+                                target_busyness=self.cfg.target_busyness,
+                                max_parallelism=self.cfg.max_parallelism)
+        if self.cfg.policy == "ds2":
+            # DS2 couples memory to slots: every task keeps the base grant
+            return {op: (p, 0 if metrics[op]["stateful"] else 0)
+                    for op, p in ds2_p.items()}
+        decisions = justin_policy(self.flow, metrics, ds2_p, self.jstate,
+                                  self.cfg.justin)
+        commit(self.jstate, decisions, metrics)
+        return {op: (d.parallelism, d.memory_level)
+                for op, d in decisions.items()}
+
+    def resources(self) -> tuple[int, float]:
+        config = self.flow.config()
+        if self.cfg.policy == "ds2":
+            # one-size-fits-all: every slot keeps the base managed grant
+            # whether its task uses it or not (Takeaway 1)
+            config = {op: (p, 0) for op, (p, lvl) in config.items()}
+        pl = placement_for_config(config, base_mem_mb=self.cfg.base_mem_mb,
+                                  exclude=set(self.flow.sources()))
+        return pl.cpu_cores, pl.memory_mb
+
+    def run(self, *, max_windows: int | None = None) -> list[HistoryRow]:
+        """Run until converged (no trigger) or max_reconfigs spent."""
+        windows = max_windows or (self.cfg.max_reconfigs + 4)
+        for w in range(windows):
+            self.engine.run(self._window_s(), self.target)
+            metrics = self.engine.collect()
+            src = sum(metrics[s]["rate_out"] for s in self.flow.sources())
+            trig = (self.steps < self.cfg.max_reconfigs
+                    and should_trigger(self.flow, metrics, self.target,
+                                       busy_high=self.cfg.busy_high))
+            cpu, mem = self.resources()
+            self.history.append(HistoryRow(
+                t=self.engine.now, step=self.steps, achieved_rate=src,
+                cpu_cores=cpu, memory_mb=mem,
+                config=self.flow.config(), triggered=trig))
+            if not trig:
+                if w > 0:       # converged after at least one observation
+                    break
+                continue
+            new_config = self.decide(metrics)
+            if new_config != self.flow.config():
+                self.steps += 1
+                self.engine.reconfigure(new_config)
+                # stabilization: run and discard one short window
+                self.engine.run(self.cfg.stabilization_s
+                                * self.cfg.sim_time_scale, self.target)
+                self.engine.collect()
+        return self.history
+
+    # ------------------------------------------------------------- reporting
+    def summary(self) -> dict:
+        last = self.history[-1]
+        return {"policy": self.cfg.policy, "steps": self.steps,
+                "achieved_rate": last.achieved_rate, "target": self.target,
+                "cpu_cores": last.cpu_cores, "memory_mb": last.memory_mb,
+                "config": {op: pc for op, pc in last.config.items()},
+                "windows": len(self.history)}

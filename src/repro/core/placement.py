@@ -1,0 +1,103 @@
+"""Task-to-TaskManager placement: multidimensional bin packing (§4.3).
+
+Each task needs (1 slot, m MB managed memory); each TM offers ``slots`` slots
+and a managed-memory pool.  First-fit-decreasing on memory, spawning a new TM
+whenever the packing fails — exactly the Kubernetes-Operator behaviour the
+paper describes.  The resource accounting (CPU cores = used slots; memory =
+TM base + managed) feeds the §5 comparison plots.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class TMSpec:
+    slots: int = 4
+    managed_pool_mb: float = 4 * 158.0        # default: 158 MB per slot (§5)
+    base_mb: float = 2048.0 - 4 * 158.0       # heap/network/framework share
+
+
+@dataclass
+class TaskRequest:
+    op: str
+    index: int
+    memory_mb: float
+
+
+@dataclass
+class TaskManager:
+    spec: TMSpec
+    tasks: list[TaskRequest] = field(default_factory=list)
+
+    @property
+    def used_slots(self) -> int:
+        return len(self.tasks)
+
+    @property
+    def used_mem(self) -> float:
+        return sum(t.memory_mb for t in self.tasks)
+
+    def fits(self, req: TaskRequest) -> bool:
+        return (self.used_slots < self.spec.slots
+                and self.used_mem + req.memory_mb <= self.spec.managed_pool_mb)
+
+
+@dataclass
+class Placement:
+    tms: list[TaskManager]
+
+    @property
+    def n_tms(self) -> int:
+        return len(self.tms)
+
+    @property
+    def cpu_cores(self) -> int:
+        return sum(tm.used_slots for tm in self.tms)
+
+    @property
+    def memory_mb(self) -> float:
+        """Overall consumption (paper §5: heap + network + managed).  A
+        spawned TM's heap/network share is reserved at pod creation and
+        counts fully; managed memory counts per actual grant — which for DS2
+        is the uniform per-slot reservation (Takeaway 1) and for Justin the
+        heterogeneous task grants."""
+        return sum(tm.spec.base_mb + tm.used_mem for tm in self.tms)
+
+
+def bin_pack(requests: list[TaskRequest], spec: TMSpec = TMSpec(),
+             existing: list[TaskManager] | None = None) -> Placement:
+    """First-fit-decreasing on memory; spawn TMs on demand."""
+    tms = existing or []
+    for req in sorted(requests, key=lambda r: -r.memory_mb):
+        for tm in tms:
+            if tm.fits(req):
+                tm.tasks.append(req)
+                break
+        else:
+            tm = TaskManager(spec)
+            if not tm.fits(req):
+                raise ValueError(
+                    f"task {req.op}[{req.index}] needs {req.memory_mb} MB "
+                    f"> TM pool {spec.managed_pool_mb} MB")
+            tm.tasks.append(req)
+            tms.append(tm)
+    return Placement(tms)
+
+
+def placement_for_config(config: dict[str, tuple[int, int | None]],
+                         *, base_mem_mb: float = 158.0,
+                         exclude: set[str] | None = None,
+                         spec: TMSpec | None = None) -> Placement:
+    """Build the task list from a configuration C^t and pack it."""
+    from repro.streaming.engine import level_mb
+    exclude = exclude or set()
+    spec = spec or TMSpec(managed_pool_mb=4 * base_mem_mb * 4,
+                          base_mb=2048.0 - 4 * base_mem_mb)
+    reqs = []
+    for op, (p, lvl) in config.items():
+        if op in exclude:
+            continue
+        for i in range(p):
+            reqs.append(TaskRequest(op, i, level_mb(lvl, base_mem_mb)))
+    return bin_pack(reqs, spec)

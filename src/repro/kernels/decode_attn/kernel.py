@@ -1,0 +1,100 @@
+"""Pallas TPU decode attention (FlashDecoding-style split-KV).
+
+The serving analogue of the LSM state read (DESIGN.md §2): one query token
+reads a long cache.  Decode is memory-bound, so the kernel's job is to
+stream the KV cache HBM->VMEM exactly once at full bandwidth: grid
+(batch*heads, kv_blocks) with the cache block-tiled on the S axis and the
+online-softmax statistics (m, l, acc) carried in VMEM scratch across KV
+blocks.  Blocks past the valid length are skipped entirely (``pl.when``),
+so ragged caches don't waste bandwidth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+KV_BLOCK = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, kv_blocks: int, scale: float):
+    kj = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid_len = len_ref[0]
+
+    @pl.when(kj * KV_BLOCK < valid_len)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # [1, D]
+        k = k_ref[0].astype(jnp.float32)                  # [KB, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [1, KB]
+        pos = kj * KV_BLOCK + jax.lax.broadcasted_iota(
+            jnp.int32, (1, KV_BLOCK), 1)
+        s = jnp.where(pos < valid_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # [1, D]
+        m_ref[...] = m_new
+
+    @pl.when(kj == kv_blocks - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     valid_len: jax.Array, *,
+                     interpret: bool = True) -> jax.Array:
+    """q: [B, H, D]; caches: [B, H, S, D]; valid_len: scalar or [B] int32.
+
+    Returns [B, H, D] (KV heads already repeated to H by the caller)."""
+    b, h, d = q.shape
+    s = k_cache.shape[2]
+    scale = d ** -0.5
+    pad = (-s) % KV_BLOCK
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    kv_blocks = sp // KV_BLOCK
+    valid = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+    valid_bh = jnp.repeat(valid, h)                       # [B*H]
+    kernel = functools.partial(_decode_kernel, kv_blocks=kv_blocks,
+                               scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bh, j: (bh, 0, 0)),
+            pl.BlockSpec((1, KV_BLOCK, d), lambda bh, j: (bh, j, 0)),
+            pl.BlockSpec((1, KV_BLOCK, d), lambda bh, j: (bh, j, 0)),
+            pl.BlockSpec((1,), lambda bh, j: (bh,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bh, j: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(b * h, 1, d), k_cache.reshape(b * h, sp, d),
+      v_cache.reshape(b * h, sp, d), valid_bh)
+    return out.reshape(b, h, d)

@@ -1,0 +1,22 @@
+"""Jitted public wrapper for decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.kernel import decode_attention
+from repro.kernels.decode_attn.ref import decode_attention_ref
+
+
+def decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+           valid_len, *, impl: str = "pallas",
+           interpret: bool = True) -> jax.Array:
+    """GQA-aware: repeats KV heads to match q heads."""
+    if k_cache.shape[1] != q.shape[1]:
+        rep = q.shape[1] // k_cache.shape[1]
+        k_cache = jnp.repeat(k_cache, rep, axis=1)
+        v_cache = jnp.repeat(v_cache, rep, axis=1)
+    if impl == "ref":
+        return decode_attention_ref(q, k_cache, v_cache, valid_len)
+    return decode_attention(q, k_cache, v_cache, valid_len,
+                            interpret=interpret)

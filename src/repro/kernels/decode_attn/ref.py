@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for decode attention (one token vs. a KV cache)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid_len):
+    """q: [B, H, D]; caches: [B, H, S, D]; valid_len: int or [B].
+
+    Returns [B, H, D].  Slots >= valid_len are masked out.
+    """
+    b, h, s, d = k_cache.shape
+    scale = d ** -0.5
+    scores = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    valid = jnp.asarray(valid_len)
+    valid = valid if valid.ndim else jnp.broadcast_to(valid, (b,))
+    mask = jnp.arange(s)[None, :] < valid[:, None]
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    p = jnp.exp(scores - jnp.max(scores, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    return jnp.einsum("bhs,bhsd->bhd", p,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)

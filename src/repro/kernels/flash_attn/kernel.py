@@ -1,0 +1,119 @@
+"""Pallas TPU flash attention (prefill/training forward).
+
+Grid: (batch*heads, q_blocks, kv_blocks) with the KV dimension innermost and
+sequential; online-softmax statistics (m, l) and the output accumulator live
+in VMEM scratch across KV steps.  Block shapes are MXU-aligned (256-lane
+blocks, head_dim on the minor axis).  Causal masking is applied at element
+granularity inside the block and fully-masked KV blocks are skipped with
+``pl.when`` (no FLOPs spent on the upper triangle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Q_BLOCK = 256
+KV_BLOCK = 256
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 causal: bool, window, kv_blocks: int,
+                 seq_q: int, seq_kv: int, scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    shift = seq_kv - seq_q
+    q_pos = (qi * Q_BLOCK + shift
+             + jax.lax.broadcasted_iota(jnp.int32, (Q_BLOCK, 1), 0))
+    k_pos = kj * KV_BLOCK + jax.lax.broadcasted_iota(
+        jnp.int32, (1, KV_BLOCK), 1)
+
+    # block-level skip: causal upper triangle / outside the SWA band
+    run = kj >= 0
+    if causal:
+        run &= kj * KV_BLOCK <= qi * Q_BLOCK + shift + Q_BLOCK - 1
+    if window is not None:
+        run &= (kj + 1) * KV_BLOCK - 1 > qi * Q_BLOCK + shift - window
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # [QB, D]
+        k = k_ref[0].astype(jnp.float32)                  # [KB, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = k_pos < seq_kv
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == kv_blocks - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    interpret: bool = True) -> jax.Array:
+    """q/k/v: [B, H, S, D] (KV already repeated to H heads).  Returns same."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    scale = d ** -0.5
+    q_pad = (-sq) % Q_BLOCK
+    kv_pad = (-skv) % KV_BLOCK
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, q_pad), (0, 0)))
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, kv_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, kv_pad), (0, 0)))
+    bh = b * h
+    qf = q.reshape(bh, -1, d)
+    kf = k.reshape(bh, -1, d)
+    vf = v.reshape(bh, -1, d)
+    q_blocks = qf.shape[1] // Q_BLOCK
+    kv_blocks = kf.shape[1] // KV_BLOCK
+    kernel = functools.partial(
+        _attn_kernel, causal=causal, window=window,
+        kv_blocks=kv_blocks, seq_q=sq, seq_kv=skv, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, q_blocks, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, Q_BLOCK, d), lambda b_, i, j: (b_, i, 0)),
+            pl.BlockSpec((1, KV_BLOCK, d), lambda b_, i, j: (b_, j, 0)),
+            pl.BlockSpec((1, KV_BLOCK, d), lambda b_, i, j: (b_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q_BLOCK, d), lambda b_, i, j: (b_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qf.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Q_BLOCK, 1), jnp.float32),
+            pltpu.VMEM((Q_BLOCK, 1), jnp.float32),
+            pltpu.VMEM((Q_BLOCK, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, -1, d)[:, :, :sq]

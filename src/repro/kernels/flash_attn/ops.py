@@ -1,0 +1,22 @@
+"""Jitted public wrapper for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention
+from repro.kernels.flash_attn.ref import flash_attention_ref
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              impl: str = "pallas", interpret: bool = True) -> jax.Array:
+    """GQA-aware entry point: repeats KV heads to match q heads."""
+    if k.shape[1] != q.shape[1]:
+        rep = q.shape[1] // k.shape[1]
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if impl == "ref":
+        return flash_attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=interpret)

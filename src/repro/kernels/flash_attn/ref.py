@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention (full-materialization softmax)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int | None = None):
+    """q/k/v: [B, H, S, D] (same head count — caller repeats KV for GQA)."""
+    b, h, s, d = q.shape
+    skv = k.shape[2]
+    scale = d ** -0.5
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None] + (skv - s)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((s, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jnp.exp(scores - jnp.max(scores, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,15 @@
+"""Jitted public wrapper for the sorted-run probe."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.sorted_probe.kernel import sorted_probe
+from repro.kernels.sorted_probe.ref import sorted_probe_ref
+
+
+def probe(table: jax.Array, queries: jax.Array, *,
+          impl: str = "pallas", interpret: bool = True):
+    """impl: "pallas" (TPU kernel; interpret=True executes on CPU) | "ref"."""
+    if impl == "ref":
+        return sorted_probe_ref(table, queries)
+    return sorted_probe(table, queries, interpret=interpret)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: keyed window aggregation (segment sum).
+
+TPU adaptation (DESIGN.md §3): scatter-add — the GPU/CPU idiom for keyed
+aggregation — has no efficient TPU analogue (no per-lane atomics).  The
+MXU-native formulation is a one-hot matmul: for an event tile with segment
+ids s and values v,  sums += one_hot(s)ᵀ @ v  — a dense [E, S_blk]x[E, V]
+product on the systolic array.  The segment axis is blocked over the grid so
+the one-hot never exceeds a VMEM tile; event tiles stream sequentially and
+accumulate.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EVENT_TILE = 1024
+SEG_BLOCK = 512
+
+
+def _agg_kernel(seg_ref, val_ref, sum_ref, cnt_ref):
+    j = pl.program_id(1)                       # event-tile index (sequential)
+
+    @pl.when(j == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    i = pl.program_id(0)                       # segment-block index
+    seg = seg_ref[...]                         # [EVENT_TILE]
+    val = val_ref[...]                         # [EVENT_TILE, V]
+    local = seg - i * SEG_BLOCK
+    onehot = (local[:, None] ==
+              jnp.arange(SEG_BLOCK)[None, :]).astype(val.dtype)
+    sum_ref[...] += jnp.einsum("es,ev->sv", onehot, val,
+                               preferred_element_type=jnp.float32)
+    cnt_ref[...] += jnp.sum(onehot, axis=0)
+
+
+@partial(jax.jit, static_argnames=("n_segments", "interpret"))
+def window_agg(seg_ids: jax.Array, values: jax.Array, n_segments: int, *,
+               interpret: bool = True):
+    """seg_ids: [N] int32; values: [N, V] f32.  Returns (sums, counts)."""
+    n, v = values.shape
+    n_pad = (-n) % EVENT_TILE
+    if n_pad:
+        seg_ids = jnp.concatenate(
+            [seg_ids, jnp.full(n_pad, -1, seg_ids.dtype)])  # -1 matches none
+        values = jnp.concatenate([values, jnp.zeros((n_pad, v), values.dtype)])
+    s_pad = (-n_segments) % SEG_BLOCK
+    n_seg_padded = n_segments + s_pad
+    grid = (n_seg_padded // SEG_BLOCK, values.shape[0] // EVENT_TILE)
+    sums, counts = pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((EVENT_TILE,), lambda i, j: (j,)),
+            pl.BlockSpec((EVENT_TILE, v), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((SEG_BLOCK, v), lambda i, j: (i, 0)),
+            pl.BlockSpec((SEG_BLOCK,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_seg_padded, v), jnp.float32),
+            jax.ShapeDtypeStruct((n_seg_padded,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seg_ids, values)
+    return sums[:n_segments], counts[:n_segments]

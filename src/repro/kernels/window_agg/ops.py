@@ -1,0 +1,14 @@
+"""Jitted public wrapper for keyed window aggregation."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.window_agg.kernel import window_agg
+from repro.kernels.window_agg.ref import window_agg_ref
+
+
+def aggregate(seg_ids: jax.Array, values: jax.Array, n_segments: int, *,
+              impl: str = "pallas", interpret: bool = True):
+    if impl == "ref":
+        return window_agg_ref(seg_ids, values, n_segments)
+    return window_agg(seg_ids, values, n_segments, interpret=interpret)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for keyed window aggregation (segment sum + count)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def window_agg_ref(seg_ids: jnp.ndarray, values: jnp.ndarray, n_segments: int):
+    """seg_ids: [N] int32 in [0, n_segments); values: [N, V] float32.
+
+    Returns (sums [n_segments, V], counts [n_segments]).
+    """
+    sums = jax.ops.segment_sum(values, seg_ids, num_segments=n_segments)
+    counts = jax.ops.segment_sum(jnp.ones_like(seg_ids, jnp.float32), seg_ids,
+                                 num_segments=n_segments)
+    return sums, counts

@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines — jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes, with no array allocation (ShapeDtypeStruct inputs).
+(No ``from __future__ import annotations`` here: the XLA_FLAGS lines above
+must stay the first statements in the file.)
+
+For each cell this prints/records:
+  * compiled.memory_analysis()  — proves the step fits per-chip HBM
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for §Roofline
+  * collective-bytes parsed from the stablehlo/HLO text (all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+      --shape train_4k [--multi-pod] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import applicable_shapes, get_config, get_shape, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.model import (abstract_batch, abstract_cache,
+                                abstract_params, batch_specs, drop_dp_axes,
+                                get_model)
+from repro.models.sharding import MeshCtx
+from repro.train.optimizer import AdamWConfig, init_opt_state, opt_state_specs
+from repro.train.train_step import (make_prefill_step, make_serve_step,
+                                    make_train_step)
+
+_COLL_RE = re.compile(
+    r"\"(all-gather(?:-start)?|all-reduce(?:-start)?|reduce-scatter"
+    r"|all-to-all|collective-permute(?:-start)?)"
+    r"[^\"]*\"[^f]*?((?:f32|f16|bf16|f64|s32|s8|u32|u8|pred|s64|u64)"
+    r"\[[0-9,]*\])", re.S)
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "f16": 2, "bf16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def collective_bytes_from_text(hlo: str) -> dict:
+    """Sum output-shape bytes of every collective op in compiled HLO text."""
+    out: dict[str, float] = {}
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+                     r"\(?((?:f32|f16|bf16|f64|s32|s8|u32|u8|pred|s64|u64)"
+                     r"\[[0-9,]*\])", s)
+        if not m:
+            continue
+        op = None
+        for name in ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute"):
+            if re.search(rf"=\s*\(?[\w\[\],\s{{}}]*\)?\s*{name}(-start)?\(",
+                         s):
+                op = name
+                break
+        if op is None:
+            continue
+        total = 0
+        for tm in re.finditer(r"((?:f32|f16|bf16|f64|s32|s8|u32|u8|pred|s64"
+                              r"|u64))\[([0-9,]*)\]", s.split("(")[0] + "("
+                              + m.group(1)):
+            dt, dims = tm.group(1), tm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+            break                                   # first shape = output
+        out[op] = out.get(op, 0) + total
+    return out
+
+
+def _shard_tree(mctx: MeshCtx, specs):
+    from jax.sharding import PartitionSpec as P
+    return jax.tree.map(lambda s: mctx.sharding(s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mctx: MeshCtx):
+    """Build the jitted step for one cell and return (lowered, meta)."""
+    from jax.sharding import PartitionSpec as P
+    model = get_model(cfg)
+    params = abstract_params(cfg, mctx)
+    pspecs = model.param_specs(cfg, mctx)
+    dp_ok = shape.global_batch % mctx.dp_size == 0
+    dp = mctx.dp if dp_ok else None
+
+    if shape.kind == "train":
+        ocfg = AdamWConfig(opt_dtype=cfg.opt_dtype)
+        opt = jax.eval_shape(lambda: init_opt_state(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params), ocfg))
+        ospecs = opt_state_specs(pspecs)
+        opt = jax.tree.map(
+            lambda sh, sp: jax.ShapeDtypeStruct(sh.shape, sh.dtype,
+                                                sharding=mctx.sharding(sp)),
+            opt, ospecs,
+            is_leaf=lambda x: isinstance(
+                x, (jax.ShapeDtypeStruct, jax.sharding.PartitionSpec)))
+        batch = abstract_batch(cfg, shape, mctx)
+        step = make_train_step(cfg, mctx, ocfg)
+        out_sh = (_shard_tree(mctx, pspecs), _shard_tree(mctx, ospecs),
+                  {"loss": mctx.sharding(P()),
+                   "grad_norm": mctx.sharding(P())})
+        jitted = jax.jit(step, donate_argnums=(0, 1), out_shardings=out_sh)
+        return jitted.lower(params, opt, batch), "train_step"
+
+    cspecs = model.cache_specs(cfg, mctx, shape.seq_len)
+    if not dp_ok:
+        cspecs = drop_dp_axes(cspecs, mctx)
+    logits_sh = mctx.sharding(P(dp, "model"))
+
+    if shape.kind == "prefill":
+        batch = abstract_batch(cfg, shape, mctx)
+        step = make_prefill_step(cfg, mctx)
+        jitted = jax.jit(step,
+                         out_shardings=(logits_sh, _shard_tree(mctx, cspecs)))
+        return jitted.lower(params, batch), "prefill_step"
+
+    # decode
+    caches = abstract_cache(cfg, shape, mctx)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32,
+                                  sharding=mctx.sharding(P(dp, None)))
+    t = jax.ShapeDtypeStruct((), jnp.int32)
+    step = make_serve_step(cfg, mctx)
+    jitted = jax.jit(step, donate_argnums=(1,),
+                     out_shardings=(logits_sh, _shard_tree(mctx, cspecs)))
+    return jitted.lower(params, caches, tokens, t), "serve_step"
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mctx = MeshCtx(mesh)
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "step": None, "ok": False}
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered, step_name = lower_cell(cfg, shape, mctx)
+            rec["step"] = step_name
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        coll = collective_bytes_from_text(hlo)
+        n_dev = mesh.devices.size
+        rec.update(
+            ok=True,
+            lower_s=round(t1 - t0, 1), compile_s=round(t2 - t1, 1),
+            flops=float(cost.get("flops", 0.0)),
+            bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+            argument_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+            output_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+            temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+            peak_bytes_per_device=int(
+                getattr(mem, "peak_memory_in_bytes", 0)),
+            collective_bytes=coll,
+            collective_bytes_total=float(sum(coll.values())),
+            n_devices=n_dev,
+        )
+        if verbose:
+            print(f"[ok] {arch} x {shape_name} ({rec['mesh']}, {step_name}) "
+                  f"lower={rec['lower_s']}s compile={rec['compile_s']}s")
+            print(f"     memory_analysis: args={rec['argument_bytes']:,} "
+                  f"out={rec['output_bytes']:,} temp={rec['temp_bytes']:,} "
+                  f"peak/dev={rec['peak_bytes_per_device']:,}")
+            print(f"     cost_analysis: flops={rec['flops']:.3e} "
+                  f"bytes={rec['bytes_accessed']:.3e}")
+            print(f"     collectives: { {k: f'{v:.3e}' for k, v in coll.items()} }")
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} ({rec['mesh']}): "
+                  f"{rec['error'][:400]}")
+            traceback.print_exc()
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in list_archs():
+            for sh in applicable_shapes(get_config(arch)):
+                cells.append((arch, sh))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("need --arch and --shape (or --all)")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    records = []
+    for arch, sh in cells:
+        for mp in meshes:
+            records.append(run_cell(arch, sh, multi_pod=mp))
+    n_ok = sum(r["ok"] for r in records)
+    print(f"\n{n_ok}/{len(records)} cells passed")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {args.out}")
+    if n_ok != len(records):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Elastic mesh derivation: rebuild the largest usable (data, model) mesh
+from whatever devices survive a failure, and restart from the latest
+checkpoint (checkpoints store unsharded leaves, so restore onto a different
+device count is just new in_shardings — see train/checkpoint.py).
+
+Policy: keep the model axis at the largest power-of-two that still fits the
+per-device memory budget (TP degree is dictated by model size, not device
+count), and give every remaining device to the data axis.  Stragglers /
+partial pods therefore cost data-parallel throughput, never correctness.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.sharding import MeshCtx
+
+
+def derive_mesh(n_devices: int, *, model_parallel: int = 16,
+                devices=None) -> MeshCtx:
+    """Largest (data, model) mesh from ``n_devices`` survivors."""
+    devices = devices if devices is not None else jax.devices()[:n_devices]
+    tp = min(model_parallel, len(devices))
+    while len(devices) % tp:
+        tp //= 2
+    dp = len(devices) // tp
+    import numpy as np
+    grid = np.array(devices[:dp * tp]).reshape(dp, tp)
+    return MeshCtx(jax.sharding.Mesh(grid, ("data", "model")))
+
+
+def elastic_restart_plan(old_devices: int, surviving: int,
+                         *, model_parallel: int = 16) -> dict:
+    """What a controller does on failure: derive the new mesh, report the
+    throughput hit, and point at the restore path."""
+    tp = min(model_parallel, surviving)
+    while surviving % tp:
+        tp //= 2
+    dp = surviving // tp
+    used = dp * tp
+    return {
+        "surviving": surviving,
+        "mesh": (dp, tp),
+        "devices_used": used,
+        "devices_idle": surviving - used,
+        "throughput_fraction": used / old_devices,
+        "action": "restore latest committed checkpoint with new in_shardings",
+    }

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module does not touch jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benchmarks see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.sharding import MeshCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def production_mesh_ctx(*, multi_pod: bool = False) -> MeshCtx:
+    return MeshCtx(make_production_mesh(multi_pod=multi_pod))
+
+
+# --- TPU v5e hardware model (roofline constants; see EXPERIMENTS.md) ------
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

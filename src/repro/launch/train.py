@@ -1,0 +1,155 @@
+"""Training driver: any assigned arch, with checkpoint/restart fault
+tolerance and elastic restart.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --reduced \
+      --steps 50 --ckpt-dir /tmp/ckpt [--resume auto] [--fail-at 20]
+
+``--fail-at N`` injects a simulated preemption at step N (process keeps
+running, the restart path is exercised in-process: restore from the last
+committed checkpoint and continue).  ``--microbatch`` enables gradient
+accumulation; ``--compress-grads`` int8+error-feedback gradient compression.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import abstract_params, cpu_mesh_ctx, get_model
+from repro.models.sharding import MeshCtx
+from repro.train import checkpoint as ckpt_lib
+from repro.train.grad_compress import (compress_with_feedback,
+                                       dequantize_int8, init_error_buf)
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.train.train_step import make_loss_fn
+
+
+def synth_batch(cfg, batch: int, seq: int, key) -> dict:
+    """Deterministic synthetic LM data (self-contained data pipeline)."""
+    k1, k2 = jax.random.split(key)
+    out = {"tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        out["tokens"] = out["tokens"][:, :seq - cfg.img_tokens]
+        out["img_emb"] = jax.random.normal(k2, (batch, cfg.img_tokens, 1024))
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(k2, (batch, cfg.enc_seq, 1024))
+    return out
+
+
+def train(arch: str, *, reduced: bool = True, steps: int = 20,
+          batch: int = 2, seq: int = 128, ckpt_dir: str | None = None,
+          ckpt_every: int = 10, resume: str = "no", fail_at: int | None = None,
+          microbatch: int = 1, compress_grads: bool = False,
+          lr: float = 1e-3, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mctx = cpu_mesh_ctx()
+    model = get_model(cfg)
+    ocfg = AdamWConfig(lr=lr, opt_dtype=cfg.opt_dtype)
+    loss_fn = make_loss_fn(cfg, mctx)
+
+    params = model.init(cfg, jax.random.key(0))
+    opt_state = init_opt_state(params, ocfg)
+    err_buf = init_error_buf(params) if compress_grads else None
+    start = 0
+
+    if resume == "auto" and ckpt_dir and ckpt_lib.latest_step(ckpt_dir) is not None:
+        (params, opt_state), start = ckpt_lib.restore(
+            ckpt_dir, (params, opt_state), cfg=cfg)
+        if verbose:
+            print(f"[train] resumed from step {start}")
+
+    @jax.jit
+    def step_fn(params, opt_state, batch_data, err):
+        if microbatch > 1:
+            def micro(i, acc):
+                mb = jax.tree.map(
+                    lambda x: x.reshape(microbatch, -1, *x.shape[1:])[i],
+                    batch_data)
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (acc[0] + l, jax.tree.map(jnp.add, acc[1], g))
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            loss, grads = jax.lax.fori_loop(0, microbatch, micro, zero)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch_data)
+        new_err = err
+        if err is not None:   # int8 compression + error feedback before sync
+            qs, ss, new_err = compress_with_feedback(grads, err)
+            grads = jax.tree.map(dequantize_int8, qs, ss)
+        p2, o2, m = adamw_update(params, grads, opt_state, ocfg)
+        return p2, o2, m, new_err, loss
+
+    losses = []
+    restarts = 0
+    i = start
+    t0 = time.time()
+    while i < steps:
+        try:
+            if fail_at is not None and i == fail_at:
+                fail_at = None          # fail exactly once
+                raise RuntimeError("injected node failure")
+            data = synth_batch(cfg, batch, seq, jax.random.key(1000 + i))
+            params, opt_state, metrics, err_buf, loss = step_fn(
+                params, opt_state, data, err_buf)
+            losses.append(float(loss))
+            i += 1
+            if ckpt_dir and i % ckpt_every == 0:
+                ckpt_lib.save(ckpt_dir, i, (params, opt_state), cfg=cfg)
+            if verbose and i % max(1, steps // 10) == 0:
+                print(f"[train] step {i}: loss={float(loss):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f}")
+        except RuntimeError as e:
+            if "injected" not in str(e):
+                raise
+            restarts += 1
+            if verbose:
+                print(f"[train] {e} at step {i} — restarting from checkpoint")
+            if ckpt_dir and ckpt_lib.latest_step(ckpt_dir) is not None:
+                (params, opt_state), i = ckpt_lib.restore(
+                    ckpt_dir, (params, opt_state), cfg=cfg)
+            else:                        # no checkpoint yet: cold restart
+                params = model.init(cfg, jax.random.key(0))
+                opt_state = init_opt_state(params, ocfg)
+                i = 0
+    wall = time.time() - t0
+    result = {"arch": arch, "steps": steps, "final_loss": losses[-1],
+              "first_loss": losses[0], "restarts": restarts,
+              "wall_s": round(wall, 1)}
+    if verbose:
+        print(f"[train] done: {result}")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", default="no", choices=["no", "auto"])
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+    train(args.arch, reduced=args.reduced, steps=args.steps,
+          batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
+          ckpt_every=args.ckpt_every, resume=args.resume,
+          fail_at=args.fail_at, microbatch=args.microbatch,
+          compress_grads=args.compress_grads)
+
+
+if __name__ == "__main__":
+    main()

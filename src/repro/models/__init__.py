@@ -1,0 +1,8 @@
+from repro.models.config import ArchConfig, ShapeConfig, SHAPES
+from repro.models.model import (ModelFns, abstract_batch, abstract_cache,
+                                abstract_params, get_model)
+from repro.models.sharding import MeshCtx, cpu_mesh_ctx
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "ModelFns", "get_model",
+           "abstract_batch", "abstract_cache", "abstract_params", "MeshCtx",
+           "cpu_mesh_ctx"]

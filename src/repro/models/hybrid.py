@@ -1,0 +1,307 @@
+"""RecurrentGemma / Griffin-style hybrid: RG-LRU recurrent blocks interleaved
+with local (sliding-window, MQA) attention in the configured block pattern
+(default 2 recurrent : 1 attention).
+
+The RG-LRU recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+is evaluated with ``lax.associative_scan`` (parallel prefix) for train and
+prefill — the TPU-idiomatic replacement for the sequential CUDA scan — and as
+a single fused step for decode.  Decode state is O(1) in context length, so
+recurrentgemma runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import (causal_conv1d, chunked_softmax_xent,
+                                 conv1d_step, rms_norm)
+from repro.models.sharding import MeshCtx
+from repro.models import transformer as tfm
+
+_LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _lru_coeffs(p, xc):
+    """Gate computations shared by scan and step.  xc: [..., R] (post-conv)."""
+    r = jax.nn.sigmoid(jnp.einsum("...r,rk->...k", xc,
+                                  p["wa"].astype(xc.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...r,rk->...k", xc,
+                                  p["wi"].astype(xc.dtype)).astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xc.astype(jnp.float32))
+    return a, b
+
+
+def rg_lru_scan(p, xc):
+    """xc: [B, S, R] -> h: [B, S, R] (f32 math, returns xc.dtype)."""
+    a, b = _lru_coeffs(p, xc)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(xc.dtype)
+
+
+def rg_lru_step(p, xc_t, h_prev):
+    """xc_t: [B, R]; h_prev: [B, R]."""
+    a, b = _lru_coeffs(p, xc_t)
+    h = a * h_prev.astype(jnp.float32) + b
+    return h.astype(xc_t.dtype)
+
+
+def rec_block(p, x, cfg: ArchConfig, *, mode: str, cache=None):
+    """Griffin recurrent mixer + gated output.  cache: {"conv","h"}."""
+    u = rms_norm(x, p["ln1"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", u, p["wy"].astype(u.dtype)))
+    xb = jnp.einsum("bsd,dr->bsr", u, p["wx"].astype(u.dtype))
+    new_cache = cache
+    if mode == "decode":
+        xc_t, conv_state = conv1d_step(xb[:, 0], cache["conv"],
+                                       p["conv_w"], p["conv_b"])
+        h = rg_lru_step(p, xc_t, cache["h"])
+        new_cache = {"conv": conv_state, "h": h}
+        hs = h[:, None]
+    else:
+        xc = causal_conv1d(xb, p["conv_w"], p["conv_b"])
+        hs = rg_lru_scan(p, xc)
+        if mode == "prefill":
+            w = p["conv_w"].shape[-1]
+            s = xb.shape[1]
+            conv_state = xb[:, s - (w - 1):, :] if s >= w - 1 else jnp.pad(
+                xb, ((0, 0), (w - 1 - s, 0), (0, 0)))
+            new_cache = {"conv": conv_state, "h": hs[:, -1]}
+    out = jnp.einsum("bsr,rd->bsd", hs * gate, p["wo"].astype(x.dtype))
+    x = x + out
+    x = tfm.dense_ffn_block(p, x)
+    return x, new_cache
+
+
+def _attn_layer(p, x, cfg, *, mode, positions, cache, t, mctx=None):
+    x, nc = tfm.attn_block(p, x, cfg, mode=mode, positions=positions,
+                           cache=cache, t=t, window=cfg.window, mctx=mctx)
+    x = tfm.dense_ffn_block(p, x)
+    return x, nc
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _rec_shapes(cfg: ArchConfig, n: int) -> dict:
+    d, r = cfg.d_model, cfg.lru_width
+    return ({"ln1": (n, d), "wx": (n, d, r), "wy": (n, d, r),
+             "conv_w": (n, r, cfg.conv_width), "conv_b": (n, r),
+             "lam": (n, r), "wa": (n, r, r), "wi": (n, r, r),
+             "wo": (n, r, d)}
+            | tfm._dense_ffn_shapes(cfg, n))
+
+
+def _rec_specs(dp) -> dict:
+    return ({"ln1": P(None, None), "wx": P(None, dp, "model"),
+             "wy": P(None, dp, "model"),
+             "conv_w": P(None, "model", None), "conv_b": P(None, "model"),
+             "lam": P(None, "model"), "wa": P(None, "model", None),
+             "wi": P(None, "model", None), "wo": P(None, "model", dp)}
+            | tfm._dense_ffn_specs(dp))
+
+
+def _pattern_counts(cfg: ArchConfig) -> tuple[int, int]:
+    """(full groups, leftover leading-pattern layers)."""
+    plen = len(cfg.block_pattern)
+    return cfg.num_layers // plen, cfg.num_layers % plen
+
+
+def hybrid_param_shapes(cfg: ArchConfig) -> dict:
+    g, tail = _pattern_counts(cfg)
+    group = {}
+    for idx, kind in enumerate(cfg.block_pattern):
+        group[f"{idx}_{kind}"] = (_rec_shapes(cfg, g) if kind == "rec"
+                                  else tfm._attn_shapes(cfg, g)
+                                  | tfm._dense_ffn_shapes(cfg, g))
+    shapes = {"embed": (cfg.padded_vocab, cfg.d_model), "ln_f": (cfg.d_model,),
+              "groups": group}
+    for j in range(tail):
+        kind = cfg.block_pattern[j]
+        shapes[f"tail{j}_{kind}"] = (
+            _rec_shapes(cfg, 1) if kind == "rec"
+            else tfm._attn_shapes(cfg, 1) | tfm._dense_ffn_shapes(cfg, 1))
+    return shapes
+
+
+def hybrid_param_specs(cfg: ArchConfig, mctx: MeshCtx) -> dict:
+    dp = mctx.dp if cfg.fsdp else None
+    g, tail = _pattern_counts(cfg)
+    group = {}
+    for idx, kind in enumerate(cfg.block_pattern):
+        group[f"{idx}_{kind}"] = (_rec_specs(dp) if kind == "rec"
+                                  else tfm._attn_specs(dp)
+                                  | tfm._dense_ffn_specs(dp))
+    specs = {"embed": P("model", None), "ln_f": P(None), "groups": group}
+    for j in range(tail):
+        kind = cfg.block_pattern[j]
+        specs[f"tail{j}_{kind}"] = (
+            _rec_specs(dp) if kind == "rec"
+            else tfm._attn_specs(dp) | tfm._dense_ffn_specs(dp))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Stack
+# ---------------------------------------------------------------------------
+
+def _apply_block(name, p, x, cfg, mode, positions, cache, t, mctx=None):
+    if name.split("_")[1] == "rec":
+        return rec_block(p, x, cfg, mode=mode, cache=cache)
+    return _attn_layer(p, x, cfg, mode=mode, positions=positions,
+                       cache=cache, t=t, mctx=mctx)
+
+
+def _run_hybrid(params, x, cfg, mctx, mode, positions, caches=None, t=None):
+    names = sorted(params["groups"])
+
+    def scan_fn(c, xs):
+        gp, gcache = xs
+        new = {}
+        y = c
+        for name in names:
+            cc = gcache.get(name) if gcache else None
+            y, nc = _apply_block(name, gp[name], y, cfg, mode, positions,
+                                 cc, t, mctx)
+            new[name] = nc
+        return y, new
+
+    if cfg.remat != "none" and mode == "train":
+        scan_fn = jax.checkpoint(scan_fn, prevent_cse=False)
+    if not cfg.scan_layers:     # unrolled (roofline accounting; see tfm.py)
+        n = jax.tree.leaves(params["groups"])[0].shape[0]
+        ys = []
+        for i in range(n):
+            gp = jax.tree.map(lambda a: a[i], params["groups"])
+            gc = jax.tree.map(lambda a: a[i], caches["groups"]) \
+                if caches is not None else {m: None for m in names}
+            x, nc = scan_fn(x, (gp, gc))
+            ys.append(nc)
+        new_g = jax.tree.map(lambda *a: jnp.stack(a), *ys) \
+            if ys and jax.tree.leaves(ys[0]) else None
+        new_caches = {"groups": new_g}
+    elif caches is None:
+        x, new_g = lax.scan(
+            lambda c, gp: scan_fn(c, (gp, {n: None for n in names})),
+            x, params["groups"])
+        new_caches = {"groups": new_g}
+    else:
+        x, new_g = lax.scan(scan_fn, x, (params["groups"], caches["groups"]))
+        new_caches = {"groups": new_g}
+
+    for key in sorted(k for k in params if k.startswith("tail")):
+        p1 = jax.tree.map(lambda a: a[0], params[key])
+        cc = caches.get(key) if caches else None
+        x, nc = _apply_block("t_" + key.split("_")[1], p1, x, cfg, mode,
+                             positions, cc, t, mctx)
+        new_caches[key] = nc
+    return x, new_caches
+
+
+def _logits(params, x, cfg):
+    unembed = params["embed"].T
+    return jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                      unembed.astype(jnp.float32))
+
+
+def hybrid_loss(params, batch, cfg: ArchConfig, mctx: MeshCtx):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    positions = jnp.arange(s)
+    x, _ = _run_hybrid(params, x, cfg, mctx, "train", positions)
+    x = rms_norm(x, params["ln_f"])
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    weights = jnp.ones((b, s), jnp.float32).at[:, -1].set(0.0)
+    loss = chunked_softmax_xent(x.reshape(b * s, -1), params["embed"].T,
+                                labels.reshape(-1), weights.reshape(-1),
+                                cfg.loss_chunk)
+    return loss / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def hybrid_prefill(params, batch, cfg: ArchConfig, mctx: MeshCtx):
+    tokens = batch["tokens"]
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    positions = jnp.arange(tokens.shape[1])
+    x, caches = _run_hybrid(params, x, cfg, mctx, "prefill", positions)
+    x = rms_norm(x, params["ln_f"])
+    return _logits(params, x, cfg), caches
+
+
+def hybrid_decode_step(params, caches, tokens, t, cfg: ArchConfig,
+                       mctx: MeshCtx):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    positions = jnp.asarray(t)[None]
+    x, new_caches = _run_hybrid(params, x, cfg, mctx, "decode", positions,
+                                caches=caches, t=t)
+    x = rms_norm(x, params["ln_f"])
+    return _logits(params, x, cfg), new_caches
+
+
+def hybrid_cache_shapes(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    g, tail = _pattern_counts(cfg)
+    r = cfg.lru_width
+    n_slots = min(cfg.window, seq_len)
+    rec_c = {"conv": (g, batch, cfg.conv_width - 1, r), "h": (g, batch, r)}
+    attn_c = {"k": (g, batch, cfg.num_kv_heads, n_slots, cfg.head_dim),
+              "v": (g, batch, cfg.num_kv_heads, n_slots, cfg.head_dim)}
+    group = {}
+    for idx, kind in enumerate(cfg.block_pattern):
+        group[f"{idx}_{kind}"] = rec_c if kind == "rec" else attn_c
+    caches = {"groups": group}
+    for j in range(tail):
+        kind = cfg.block_pattern[j]
+        if kind == "rec":
+            caches[f"tail{j}_{kind}"] = {
+                "conv": (batch, cfg.conv_width - 1, r), "h": (batch, r)}
+        else:
+            caches[f"tail{j}_{kind}"] = {
+                "k": (batch, cfg.num_kv_heads, n_slots, cfg.head_dim),
+                "v": (batch, cfg.num_kv_heads, n_slots, cfg.head_dim)}
+    return caches
+
+
+def hybrid_cache_specs(cfg: ArchConfig, mctx: MeshCtx,
+                       seq_len: int = 0) -> dict:
+    dp = mctx.dp
+    tp = mctx.tp_size
+    r_ax = "model" if cfg.lru_width % tp == 0 else None
+    n_slots = min(cfg.window, seq_len) if seq_len else cfg.window
+    rec_c = {"conv": P(None, dp, None, r_ax), "h": P(None, dp, r_ax)}
+    kv = tfm.kv_spec(cfg, mctx, n_slots)
+    attn_c = {"k": kv, "v": kv}
+    group = {}
+    for idx, kind in enumerate(cfg.block_pattern):
+        group[f"{idx}_{kind}"] = rec_c if kind == "rec" else attn_c
+    specs = {"groups": group}
+    g, tail = _pattern_counts(cfg)
+    kv_t = tfm.kv_spec(cfg, mctx, n_slots, lead_dims=0)
+    for j in range(tail):
+        kind = cfg.block_pattern[j]
+        if kind == "rec":
+            specs[f"tail{j}_{kind}"] = {"conv": P(dp, None, r_ax),
+                                        "h": P(dp, r_ax)}
+        else:
+            specs[f"tail{j}_{kind}"] = {"k": kv_t, "v": kv_t}
+    return specs
+
+
+def init_hybrid_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    return tfm._init_from_shapes(hybrid_param_shapes(cfg), key,
+                                 jnp.dtype(cfg.param_dtype))

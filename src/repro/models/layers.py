@@ -1,0 +1,291 @@
+"""Core building blocks shared by all model families.
+
+Attention comes in two lowering-friendly flavours:
+
+* ``chunked_attention`` — pure-jnp flash-style attention: python-unrolled over
+  query chunks (so each chunk sees a *statically bounded* causal/banded KV
+  range — no masked-out chunk is ever computed) with an online-softmax
+  ``lax.scan`` over KV chunks inside (so peak memory is one [qc, kc] tile).
+  This is the dry-run/CPU path and the oracle for the Pallas kernels.
+* ``repro.kernels.flash_attn`` / ``decode_attn`` — the Pallas TPU targets.
+
+All softmax/normalization statistics are computed in float32 regardless of
+the compute dtype.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+def rotary(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply rotary embedding.  x: [..., S, H, Dh]; positions: [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq          # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                                # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(seq: int, dim: int) -> jax.Array:
+    """Whisper-style sinusoidal position embedding table [seq, dim] (f32)."""
+    half = dim // 2
+    freq = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / max(half - 1, 1))
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash-style attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _kv_range(i: int, q_chunk: int, sq: int, skv: int, *, causal: bool,
+              window: int | None, chunk_attn: int | None,
+              kv_chunk: int) -> tuple[int, int]:
+    """Static [lo, hi) KV range needed by query chunk ``i`` (python ints)."""
+    q_lo = i * q_chunk
+    q_hi = min((i + 1) * q_chunk, sq)
+    hi = q_hi + (skv - sq) if causal else skv          # offset when skv > sq
+    hi = min(max(hi, 1), skv)
+    lo = 0
+    if window is not None:
+        lo = max(lo, q_lo + (skv - sq) - window + 1)
+    if chunk_attn is not None:
+        lo = max(lo, ((q_lo + (skv - sq)) // chunk_attn) * chunk_attn)
+    lo = (lo // kv_chunk) * kv_chunk                   # align for clean tiles
+    return lo, hi
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True,
+                      window: int | None = None,
+                      chunk_attn: int | None = None,
+                      q_chunk: int = 512,
+                      kv_chunk: int = 1024,
+                      q_offset: int = 0,
+                      f32_stats: bool = True) -> jax.Array:
+    """Flash-style attention.
+
+    q: [B, Hq, Sq, Dh];  k, v: [B, Hk, Skv, Dh] with Hq % Hk == 0.
+    ``q_offset``: absolute position of q[0] minus absolute position of k[0]
+    is ``Skv - Sq`` when causal (suffix alignment); q_offset shifts further.
+    Returns [B, Hq, Sq, Dh] in q.dtype.
+    """
+    b, hq, sq, dh = q.shape
+    hk, skv = k.shape[1], k.shape[2]
+    if hq != hk:
+        rep = hq // hk
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = dh ** -0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq = cdiv(sq, q_chunk)
+    pos_shift = (skv - sq) if causal else 0
+
+    outs = []
+    for i in range(nq):
+        qc = min(q_chunk, sq - i * q_chunk)
+        q_i = lax.slice_in_dim(q, i * q_chunk, i * q_chunk + qc, axis=2)
+        q_i32 = q_i.astype(jnp.float32) * scale
+        q_pos = (i * q_chunk + jnp.arange(qc) + pos_shift + q_offset)  # [qc]
+        lo, hi = _kv_range(i, q_chunk, sq, skv, causal=causal, window=window,
+                           chunk_attn=chunk_attn, kv_chunk=kv_chunk)
+        nkv = cdiv(hi - lo, kv_chunk)
+        starts = lo + jnp.arange(nkv) * kv_chunk
+
+        def body(carry, start, q_i32=q_i32, q_pos=q_pos, qc=qc):
+            m, l, acc = carry
+            k_j = lax.dynamic_slice_in_dim(k, start, kv_chunk, axis=2)
+            v_j = lax.dynamic_slice_in_dim(v, start, kv_chunk, axis=2)
+            kv_pos = start + jnp.arange(kv_chunk)                     # [kc]
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_i32,
+                           k_j.astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+            mask = kv_pos[None, :] < hi                               # edge pad
+            if causal:
+                mask &= kv_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            if chunk_attn is not None:
+                mask &= (kv_pos[None, :] // chunk_attn
+                         ) == (q_pos[:, None] // chunk_attn)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            # §Perf: bf16 probability tile halves the dominant HBM operand
+            # of the p@v matmul (statistics m/l stay f32 either way)
+            pd = jnp.float32 if f32_stats else q.dtype
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(pd), v_j.astype(pd),
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, hq, qc), NEG_INF, jnp.float32),
+                jnp.zeros((b, hq, qc), jnp.float32),
+                jnp.zeros((b, hq, qc, dh), jnp.float32))
+        (m, l, acc), _ = lax.scan(body, init, starts)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(out.astype(q.dtype))
+    return jnp.concatenate(outs, axis=2) if len(outs) > 1 else outs[0]
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_positions: jax.Array, t: jax.Array, *,
+                     window: int | None = None,
+                     chunk_attn: int | None = None) -> jax.Array:
+    """Grouped decode attention without materializing repeated KV heads.
+
+    q: [B, Hq, 1, Dh]; caches: [B, Hk, S, Dh]; kv_positions: [B, S] absolute
+    position held by each cache slot (-1 = empty); t: current position [B] or
+    scalar.  Returns [B, Hq, 1, Dh].
+    """
+    b, hq, _, dh = q.shape
+    hk, s = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hk
+    scale = dh ** -0.5
+    qg = q.reshape(b, hk, g, dh).astype(jnp.float32) * scale
+    sc = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    t = jnp.asarray(t)
+    tb = t if t.ndim else jnp.broadcast_to(t, (b,))
+    mask = (kv_positions >= 0) & (kv_positions <= tb[:, None])
+    if window is not None:
+        mask &= kv_positions > (tb[:, None] - window)
+    if chunk_attn is not None:
+        mask &= (kv_positions // chunk_attn) == (tb[:, None] // chunk_attn)
+    sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, hq, 1, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wo: jax.Array) -> jax.Array:
+    dt = x.dtype
+    g = jnp.einsum("...d,df->...f", x, wg.astype(dt))
+    u = jnp.einsum("...d,df->...f", x, wu.astype(dt))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, wo.astype(dt))
+
+
+def gelu_mlp(x: jax.Array, wi: jax.Array, bi: jax.Array,
+             wo: jax.Array, bo: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, wi.astype(dt)) + bi.astype(dt))
+    return jnp.einsum("...f,fd->...d", h, wo.astype(dt)) + bo.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (mamba2 / RG-LRU blocks)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None = None
+                  ) -> jax.Array:
+    """x: [B, S, C]; w: [C, W] depthwise causal filter; returns [B, S, C]."""
+    width = w.shape[-1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    s = x.shape[1]
+    for i in range(width):                       # width is tiny (4): unroll
+        out = out + xp[:, i:i + s].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+                b: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Single decode step.  x_t: [B, C]; conv_state: [B, W-1, C]."""
+    width = w.shape[-1]
+    hist = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)   # [B, W, C]
+    y = jnp.sum(hist.astype(jnp.float32)
+                * w.T.astype(jnp.float32)[None], axis=1)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    new_state = hist[:, 1:] if width > 1 else conv_state
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (never materializes full [N, V] logits w/ remat)
+# ---------------------------------------------------------------------------
+
+def chunked_softmax_xent(h: jax.Array, unembed: jax.Array, labels: jax.Array,
+                         weights: jax.Array, chunk: int) -> jax.Array:
+    """h: [N, D] final hidden states; unembed: [D, V]; labels/weights: [N].
+
+    Returns the sum of weighted token NLLs (caller divides by weight sum).
+    Each chunk's logits are recomputed in the backward pass (jax.checkpoint).
+    """
+    n, d = h.shape
+    chunk = min(chunk, n)
+    pad = (-n) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, (0, pad))
+        weights = jnp.pad(weights, (0, pad))
+    nc = (n + pad) // chunk
+    h = h.reshape(nc, chunk, d)
+    labels = labels.reshape(nc, chunk)
+    weights = weights.reshape(nc, chunk)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h_c, y_c, w_c = xs
+        logits = jnp.einsum("cd,dv->cv", h_c, unembed.astype(h_c.dtype)
+                            ).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_c[:, None], axis=-1)[:, 0]
+        return carry + jnp.sum((lse - gold) * w_c), None
+
+    total, _ = lax.scan(body, jnp.zeros((), jnp.float32), (h, labels, weights))
+    return total

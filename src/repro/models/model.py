@@ -1,0 +1,151 @@
+"""Unified model API: one entry point per (family), dispatched from ArchConfig.
+
+Exposes abstract shapes (for the allocation-free dry-run) and concrete
+init/loss/prefill/decode functions with matching PartitionSpec trees.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import hybrid, ssm, transformer as tfm
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.sharding import MeshCtx
+from repro.models.transformer import VIT_STUB_DIM
+
+
+@dataclass(frozen=True)
+class ModelFns:
+    param_shapes: Callable[[ArchConfig], dict]
+    param_specs: Callable[[ArchConfig, MeshCtx], dict]
+    init: Callable[[ArchConfig, jax.Array], dict]
+    loss: Callable[..., jax.Array]
+    prefill: Callable[..., tuple]
+    decode: Callable[..., tuple]
+    cache_shapes: Callable[[ArchConfig, int, int], dict]
+    cache_specs: Callable[[ArchConfig, MeshCtx], dict]
+
+
+def get_model(cfg: ArchConfig) -> ModelFns:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelFns(tfm.decoder_param_shapes, tfm.decoder_param_specs,
+                        tfm.init_decoder_params, tfm.decoder_loss,
+                        tfm.decoder_prefill, tfm.decoder_decode_step,
+                        tfm.decoder_cache_shapes, tfm.decoder_cache_specs)
+    if fam == "encdec":
+        return ModelFns(tfm.encdec_param_shapes, tfm.encdec_param_specs,
+                        tfm.init_encdec_params, tfm.encdec_loss,
+                        tfm.encdec_prefill, tfm.encdec_decode_step,
+                        tfm.encdec_cache_shapes, tfm.encdec_cache_specs)
+    if fam == "ssm":
+        return ModelFns(ssm.ssm_param_shapes, ssm.ssm_param_specs,
+                        lambda c, k: tfm._init_from_shapes(
+                            ssm.ssm_param_shapes(c), k, jnp.dtype(c.param_dtype)),
+                        ssm.ssm_loss, ssm.ssm_prefill, ssm.ssm_decode_step,
+                        ssm.ssm_cache_shapes, ssm.ssm_cache_specs)
+    if fam == "hybrid":
+        return ModelFns(hybrid.hybrid_param_shapes, hybrid.hybrid_param_specs,
+                        hybrid.init_hybrid_params, hybrid.hybrid_loss,
+                        hybrid.hybrid_prefill, hybrid.hybrid_decode_step,
+                        hybrid.hybrid_cache_shapes, hybrid.hybrid_cache_specs)
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct stand-ins — never allocated)
+# ---------------------------------------------------------------------------
+
+def _batch_axes(b: int, mctx: MeshCtx | None):
+    if mctx is None:
+        return None
+    return mctx.dp if b % mctx.dp_size == 0 else None
+
+
+def drop_dp_axes(specs, mctx: MeshCtx):
+    """Replace data-parallel axes with None (for unshardable batch=1 cells)."""
+    dpset = set(mctx.dp)
+
+    def fix(p: P) -> P:
+        ent = []
+        for e in p:
+            if e in dpset:
+                ent.append(None)
+            elif isinstance(e, tuple):
+                kept = tuple(a for a in e if a not in dpset)
+                ent.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+            else:
+                ent.append(e)
+        return P(*ent)
+
+    return jax.tree.map(fix, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shapes(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Abstract shapes for the data-pipeline inputs of one step."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        out: dict[str, Any] = {}
+        if cfg.family == "vlm":
+            out["tokens"] = ((b, s - cfg.img_tokens), jnp.int32)
+            out["img_emb"] = ((b, cfg.img_tokens, VIT_STUB_DIM), jnp.float32)
+        elif cfg.family == "encdec":
+            out["tokens"] = ((b, s), jnp.int32)
+            out["frames"] = ((b, cfg.enc_seq, VIT_STUB_DIM), jnp.float32)
+        else:
+            out["tokens"] = ((b, s), jnp.int32)
+        return out
+    return {"tokens": ((b, 1), jnp.int32)}
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mctx: MeshCtx) -> dict:
+    dp = _batch_axes(shape.global_batch, mctx)
+    shapes = batch_shapes(cfg, shape)
+    return {k: P(*((dp,) + (None,) * (len(v[0]) - 1)))
+            for k, v in shapes.items()}
+
+
+def abstract_batch(cfg: ArchConfig, shape: ShapeConfig,
+                   mctx: MeshCtx | None = None) -> dict:
+    shapes = batch_shapes(cfg, shape)
+    if mctx is None:
+        return {k: jax.ShapeDtypeStruct(v[0], v[1]) for k, v in shapes.items()}
+    specs = batch_specs(cfg, shape, mctx)
+    return {k: jax.ShapeDtypeStruct(v[0], v[1],
+                                    sharding=mctx.sharding(specs[k]))
+            for k, v in shapes.items()}
+
+
+def abstract_params(cfg: ArchConfig, mctx: MeshCtx | None = None):
+    model = get_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(cfg, jax.random.key(0)))
+    if mctx is None:
+        return shapes
+    specs = model.param_specs(cfg, mctx)
+    return jax.tree.map(
+        lambda sh, sp: jax.ShapeDtypeStruct(sh.shape, sh.dtype,
+                                            sharding=mctx.sharding(sp)),
+        shapes, specs, is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeConfig,
+                   mctx: MeshCtx | None = None):
+    model = get_model(cfg)
+    dtype = jnp.dtype(cfg.compute_dtype)
+    shapes = model.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    tree = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s, dtype), shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    if mctx is None:
+        return tree
+    specs = model.cache_specs(cfg, mctx, shape.seq_len)
+    if shape.global_batch % mctx.dp_size != 0:
+        specs = drop_dp_axes(specs, mctx)
+    return jax.tree.map(
+        lambda sh, sp: jax.ShapeDtypeStruct(sh.shape, sh.dtype,
+                                            sharding=mctx.sharding(sp)),
+        tree, specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))

@@ -1,0 +1,55 @@
+"""Mesh context + partition-spec helpers.
+
+The production mesh is ``("data", "model")`` single-pod or
+``("pod", "data", "model")`` multi-pod; the pod axis is folded into every
+data-parallel spec (gradient sync crosses pods, everything else intra-pod).
+CPU tests use a (1, 1) mesh with the same axis names so one code path serves
+both.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshCtx:
+    mesh: Mesh
+
+    @property
+    def dp(self) -> tuple[str, ...]:
+        """Data-parallel axis name(s) — includes the pod axis when present."""
+        names = self.mesh.axis_names
+        return ("pod", "data") if "pod" in names else ("data",)
+
+    @property
+    def tp(self) -> str:
+        return "model"
+
+    @property
+    def dp_size(self) -> int:
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        return int(jax.tree_util.tree_reduce(
+            lambda a, b: a * b, [sizes[a] for a in self.dp], 1))
+
+    @property
+    def tp_size(self) -> int:
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        return sizes["model"]
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def cpu_mesh_ctx() -> MeshCtx:
+    """1x1 mesh over the local device — used by smoke tests and examples."""
+    dev = jax.devices()[0]
+    import numpy as np
+    return MeshCtx(Mesh(np.array([[dev]]), ("data", "model")))
+
+
+def logical_to_sharding(tree_specs, mctx: MeshCtx):
+    return jax.tree.map(lambda s: mctx.sharding(s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

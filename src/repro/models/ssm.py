@@ -1,0 +1,252 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+Train/prefill use the chunked SSD algorithm from arXiv:2405.21060 (intra-chunk
+quadratic attention-like term + inter-chunk recurrence expressed as a small
+chunk-level matmul).  Decode is the O(1)-state recurrent step — which is why
+mamba2 runs the long_500k cell: its decode state is constant in context
+length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import (causal_conv1d, chunked_softmax_xent,
+                                 conv1d_step, rms_norm)
+from repro.models.sharding import MeshCtx
+
+
+def _segsum(x):
+    """x: [..., q] -> lower-triangular pairwise cumulative sums [..., q, q]."""
+    q = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    d = xc[..., :, None] - xc[..., None, :]
+    i = jnp.arange(q)
+    return jnp.where(i[:, None] >= i[None, :], d, -jnp.inf)
+
+
+def ssd_chunked(x, a_bar, b_mat, c_mat, chunk: int):
+    """SSD scan.  x: [B,S,H,Pd] (dt-premultiplied); a_bar: [B,S,H] (dt*A);
+    b_mat/c_mat: [B,S,N] (single group, broadcast over heads).
+    Returns y [B,S,H,Pd] and final state [B,H,Pd,N]."""
+    bsz, s0, h, pd = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s0)
+    pad = (-s0) % q
+    if pad:     # a_bar=0 => decay 1 (state preserved); x=0 => no contribution
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_bar = jnp.pad(a_bar, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    s = s0 + pad
+    nc = s // q
+
+    xc = x.reshape(bsz, nc, q, h, pd)
+    ac = a_bar.reshape(bsz, nc, q, h).transpose(0, 3, 1, 2)       # [b,h,c,q]
+    bc = b_mat.reshape(bsz, nc, q, n)
+    cc = c_mat.reshape(bsz, nc, q, n)
+    a_cum = jnp.cumsum(ac, axis=-1)                                # [b,h,c,q]
+
+    # 1. intra-chunk (diagonal blocks)
+    l_mat = jnp.exp(_segsum(ac))                                   # [b,h,c,q,q]
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", cc, bc, l_mat, xc)
+
+    # 2. per-chunk final states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)                # [b,h,c,q]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence as a (c+1)x(c+1) decay matmul
+    chunk_decay = jnp.exp(_segsum(jnp.pad(a_cum[..., -1],
+                                          ((0, 0), (0, 0), (1, 0)))))
+    states_in = jnp.concatenate(
+        [jnp.zeros_like(states[:, :1]), states], axis=1)           # [b,c+1,h,p,n]
+    all_states = jnp.einsum("bhzc,bchpn->bzhpn", chunk_decay, states_in)
+    prev_states, final_state = all_states[:, :-1], all_states[:, -1]
+
+    # 4. inter-chunk contribution to outputs
+    out_decay = jnp.exp(a_cum)                                     # [b,h,c,q]
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cc, prev_states, out_decay)
+    y = (y_diag + y_off).reshape(bsz, s, h, pd)[:, :s0]
+    return y, final_state
+
+
+# ---------------------------------------------------------------------------
+# Block
+# ---------------------------------------------------------------------------
+
+def mamba_block(p, x, cfg: ArchConfig, *, mode: str, cache=None):
+    """x: [B, S, D].  cache: {"conv": [B,W-1,Cc], "state": [B,H,Pd,N]}."""
+    bsz, s, _ = x.shape
+    d_in, ds, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    u = rms_norm(x, p["ln"])
+    # z / xBC / dt projections are separate params so each output dim shards
+    # evenly over the model axis (a fused in_proj would have a ragged width)
+    z = jnp.einsum("bsd,dp->bsp", u, p["wz"].astype(u.dtype))
+    xbc = jnp.einsum("bsd,dp->bsp", u, p["wxbc"].astype(u.dtype))
+    dt = jnp.einsum("bsd,dp->bsp", u, p["wdt"].astype(u.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))       # [B,S,H]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                   # [H]
+
+    new_cache = cache
+    if mode == "decode":
+        xbc_t, conv_state = conv1d_step(xbc[:, 0], cache["conv"],
+                                        p["conv_w"], p["conv_b"])
+        xbc_t = jax.nn.silu(xbc_t)
+        xs = xbc_t[..., :d_in].reshape(bsz, h, pd)
+        b_t = xbc_t[..., d_in:d_in + ds]
+        c_t = xbc_t[..., d_in + ds:]
+        dt_t = dt[:, 0]                                            # [B,H]
+        a_bar = jnp.exp(dt_t * a[None])                            # [B,H]
+        st = cache["state"].astype(jnp.float32)
+        st = (a_bar[..., None, None] * st
+              + jnp.einsum("bh,bhp,bn->bhpn", dt_t, xs.astype(jnp.float32),
+                           b_t.astype(jnp.float32)))
+        y = jnp.einsum("bhpn,bn->bhp", st, c_t.astype(jnp.float32))
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+        new_cache = {"conv": conv_state, "state": st.astype(cache["state"].dtype)}
+    else:
+        xbc_c = jax.nn.silu(causal_conv1d(xbc, p["conv_w"], p["conv_b"]))
+        xs = xbc_c[..., :d_in].reshape(bsz, s, h, pd)
+        b_mat = xbc_c[..., d_in:d_in + ds]
+        c_mat = xbc_c[..., d_in + ds:]
+        x_bar = (xs.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+        y, final_state = ssd_chunked(x_bar, dt * a[None, None],
+                                     b_mat, c_mat, cfg.ssd_chunk)
+        y = y + p["D"].astype(y.dtype)[None, None, :, None] * xs.astype(y.dtype)
+        y = y.reshape(bsz, s, d_in).astype(x.dtype)
+        if mode == "prefill":
+            w = p["conv_w"].shape[-1]
+            conv_state = xbc[:, s - (w - 1):, :] if s >= w - 1 else jnp.pad(
+                xbc, ((0, 0), (w - 1 - s, 0), (0, 0)))
+            new_cache = {"conv": conv_state,
+                         "state": final_state.astype(x.dtype)}
+
+    y = rms_norm(y * jax.nn.silu(z if mode != "decode" else z[:, :1]),
+                 p["ssm_ln"])
+    return x + jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype)), \
+        new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model-level
+# ---------------------------------------------------------------------------
+
+def ssm_param_shapes(cfg: ArchConfig) -> dict:
+    n, d = cfg.num_layers, cfg.d_model
+    d_in, ds, g, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+    conv_dim = d_in + 2 * g * ds
+    layers = {
+        "ln": (n, d),
+        "wz": (n, d, d_in),
+        "wxbc": (n, d, conv_dim),
+        "wdt": (n, d, h),
+        "conv_w": (n, conv_dim, cfg.conv_width),
+        "conv_b": (n, conv_dim),
+        "A_log": (n, h), "D": (n, h), "dt_bias": (n, h),
+        "ssm_ln": (n, d_in),
+        "out_proj": (n, d_in, d),
+    }
+    return {"embed": (cfg.padded_vocab, d), "ln_f": (d,), "layers": layers}
+
+
+def ssm_param_specs(cfg: ArchConfig, mctx: MeshCtx) -> dict:
+    dp = mctx.dp if cfg.fsdp else None
+    layers = {
+        "ln": P(None, None),
+        "wz": P(None, dp, "model"),
+        "wxbc": P(None, dp, "model"),
+        "wdt": P(None, dp, None),            # nheads may not divide the axis
+        "conv_w": P(None, "model", None),
+        "conv_b": P(None, "model"),
+        "A_log": P(None, None), "D": P(None, None), "dt_bias": P(None, None),
+        "ssm_ln": P(None, "model"),
+        "out_proj": P(None, "model", dp),
+    }
+    return {"embed": P("model", None), "ln_f": P(None), "layers": layers}
+
+
+def _stack_scan(params, x, cfg, mctx, mode, caches):
+    def scan_fn(c, xs):
+        p, cache = xs
+        y, nc = mamba_block(p, c, cfg, mode=mode, cache=cache)
+        return y, nc
+
+    if cfg.remat != "none" and mode == "train":
+        scan_fn = jax.checkpoint(scan_fn, prevent_cse=False)
+    if not cfg.scan_layers:     # unrolled (roofline accounting; see tfm.py)
+        n = jax.tree.leaves(params["layers"])[0].shape[0]
+        ys = []
+        for i in range(n):
+            p = jax.tree.map(lambda a: a[i], params["layers"])
+            c = jax.tree.map(lambda a: a[i], caches) \
+                if caches is not None else None
+            x, nc = scan_fn(x, (p, c))
+            ys.append(nc)
+        new = jax.tree.map(lambda *a: jnp.stack(a), *ys) \
+            if ys and jax.tree.leaves(ys[0]) else None
+        return x, new
+    if caches is None:
+        x, new = lax.scan(lambda c, p: scan_fn(c, (p, None)),
+                          x, params["layers"])
+    else:
+        x, new = lax.scan(scan_fn, x, (params["layers"], caches))
+    return x, new
+
+
+def ssm_loss(params, batch, cfg: ArchConfig, mctx: MeshCtx):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    x, _ = _stack_scan(params, x, cfg, mctx, "train", None)
+    x = rms_norm(x, params["ln_f"])
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    weights = jnp.ones((b, s), jnp.float32).at[:, -1].set(0.0)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    loss = chunked_softmax_xent(x.reshape(b * s, -1), unembed,
+                                labels.reshape(-1), weights.reshape(-1),
+                                cfg.loss_chunk)
+    return loss / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def ssm_prefill(params, batch, cfg: ArchConfig, mctx: MeshCtx):
+    tokens = batch["tokens"]
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    x, caches = _stack_scan(params, x, cfg, mctx, "prefill", None)
+    x = rms_norm(x, params["ln_f"])
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                        unembed.astype(jnp.float32))
+    return logits, caches
+
+
+def ssm_decode_step(params, caches, tokens, t, cfg: ArchConfig, mctx: MeshCtx):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    x, new_caches = _stack_scan(params, x, cfg, mctx, "decode", caches)
+    x = rms_norm(x, params["ln_f"])
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                        unembed.astype(jnp.float32))
+    return logits, new_caches
+
+
+def ssm_cache_shapes(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    n = cfg.num_layers
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {"conv": (n, batch, cfg.conv_width - 1, conv_dim),
+            "state": (n, batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state)}
+
+
+def ssm_cache_specs(cfg: ArchConfig, mctx: MeshCtx, seq_len: int = 0) -> dict:
+    dp = mctx.dp
+    tp = mctx.tp_size
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    conv_spec = P(None, dp, None, "model") if conv_dim % tp == 0 \
+        else P(None, dp, None, None)
+    state_spec = P(None, dp, None, None, "model") if cfg.ssm_state % tp == 0 \
+        else P(None, dp, None, None, None)
+    return {"conv": conv_spec, "state": state_spec}

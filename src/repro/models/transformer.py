@@ -1,0 +1,617 @@
+"""Decoder-only transformer (dense / MoE / VLM) and Whisper-style enc-dec.
+
+Layers are stacked on a leading axis and executed under ``lax.scan`` (small
+HLO, uniform sharding specs).  llama4-style interleaving (MoE every
+``moe_period`` layers) scans over *groups* of ``moe_period`` layers whose
+first ``moe_period - 1`` members are dense and last member is MoE.
+
+Modes: ``train`` (full causal pass + chunked xent), ``prefill`` (build KV
+caches, return last-token logits), ``decode`` (one token against caches).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import moe as moe_lib
+from repro.models.config import ArchConfig
+from repro.models.layers import (causal_conv1d, chunked_attention,
+                                 chunked_softmax_xent, decode_attention,
+                                 gelu_mlp, layer_norm, rms_norm, rotary,
+                                 sinusoid_positions, swiglu)
+from repro.models.sharding import MeshCtx
+
+VIT_STUB_DIM = 1024     # the VLM/audio frontend stubs emit this width
+
+
+# ---------------------------------------------------------------------------
+# Cache geometry
+# ---------------------------------------------------------------------------
+
+def kv_cache_len(cfg: ArchConfig, seq_len: int) -> int:
+    """Slots the decode KV cache needs for a context of ``seq_len``."""
+    if cfg.chunk_attn is not None:
+        return min(cfg.chunk_attn, seq_len)
+    if cfg.window is not None:
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+def _ring_positions(t, n_slots: int):
+    """Absolute position held by each ring slot at time t (-1 if unwritten)."""
+    j = jnp.arange(n_slots)
+    pos = t - ((t - j) % n_slots)
+    return jnp.where(pos >= 0, pos, -1)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (pre-norm residual)
+# ---------------------------------------------------------------------------
+
+def _qkv(p, h, cfg: ArchConfig):
+    b, s, _ = h.shape
+    dt = h.dtype
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", h, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", h, p["wv"].astype(dt))
+    q = q.reshape(b, s, cfg.padded_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _constrain(x, mctx, spec):
+    """Activation sharding constraint (no-op off-mesh / single device)."""
+    if mctx is None or mctx.mesh.devices.size == 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, mctx.sharding(spec))
+
+
+def _attn_constraints(q, k, v, cfg: ArchConfig, mctx, mode: str):
+    """§Perf: pin attention activation shardings so GSPMD cannot factorize
+    the sharding across head_dim (which turns every score tile into a
+    partial sum needing an all-reduce when num_heads % axis != 0)."""
+    if mctx is None or cfg.attn_shard == "auto":
+        return q, k, v
+    from jax.sharding import PartitionSpec as P
+    b = q.shape[0]
+    dp = mctx.dp if b % mctx.dp_size == 0 else None
+    if cfg.attn_shard == "heads":       # [B, H, S, Dh]: H over model (uneven
+        q = _constrain(q, mctx, P(dp, "model", None, None))   # => pad, no
+        k = _constrain(k, mctx, P(dp, "model", None, None))   # Dh split)
+        v = _constrain(v, mctx, P(dp, "model", None, None))
+    elif cfg.attn_shard == "seq" and mode != "decode":
+        # context parallel: q positions over model, KV replicated
+        q = _constrain(q, mctx, P(dp, None, "model", None))
+        k = _constrain(k, mctx, P(dp, None, None, None))
+        v = _constrain(v, mctx, P(dp, None, None, None))
+    return q, k, v
+
+
+def attn_block(p, x, cfg: ArchConfig, *, mode: str, positions, cache, t,
+               use_rotary: bool = True, causal: bool = True,
+               window: int | None = "cfg", kv_override=None, mctx=None):
+    """Returns (x + attn_out, new_cache).  cache: {"k","v"} [B, K, S, Dh]."""
+    if window == "cfg":
+        window = cfg.window
+    h = rms_norm(x, p["ln1"])
+    b, s, _ = x.shape
+    if kv_override is not None:                     # cross-attention
+        q = jnp.einsum("bsd,dh->bsh", h, p["wq"].astype(h.dtype))
+        q = q.reshape(b, s, cfg.padded_heads, cfg.head_dim)
+        k, v = kv_override
+    else:
+        q, k, v = _qkv(p, h, cfg)
+        if use_rotary:
+            q = rotary(q, positions, cfg.rope_theta)
+            k = rotary(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if mode == "decode" and kv_override is None:
+        n_slots = cache["k"].shape[2]
+        slot = t % n_slots
+        kc = lax.dynamic_update_slice_in_dim(
+            cache["k"], k.transpose(0, 2, 1, 3), slot, axis=2)
+        vc = lax.dynamic_update_slice_in_dim(
+            cache["v"], v.transpose(0, 2, 1, 3), slot, axis=2)
+        new_cache = {"k": kc, "v": vc}
+        if n_slots == cache["k"].shape[2] and window is None \
+                and cfg.chunk_attn is None:
+            kv_pos = jnp.broadcast_to(jnp.arange(n_slots)[None], (b, n_slots))
+        else:
+            kv_pos = jnp.broadcast_to(_ring_positions(t, n_slots)[None],
+                                      (b, n_slots))
+        o = decode_attention(q.transpose(0, 2, 1, 3), kc, vc, kv_pos, t,
+                             window=window, chunk_attn=cfg.chunk_attn)
+    elif mode == "decode":                          # cross-attn decode
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(k.shape[2])[None], (b, k.shape[2]))
+        o = decode_attention(q.transpose(0, 2, 1, 3), k, v, kv_pos,
+                             jnp.asarray(k.shape[2] - 1), window=None)
+    else:
+        kT = k.transpose(0, 2, 1, 3) if kv_override is None else k
+        vT = v.transpose(0, 2, 1, 3) if kv_override is None else v
+        qT = q.transpose(0, 2, 1, 3)
+        qT, kT, vT = _attn_constraints(qT, kT, vT, cfg, mctx, mode)
+        o = chunked_attention(qT, kT, vT,
+                              causal=causal and kv_override is None,
+                              window=window, chunk_attn=cfg.chunk_attn,
+                              q_chunk=cfg.attn_q_chunk,
+                              kv_chunk=cfg.attn_kv_chunk,
+                              f32_stats=cfg.attn_f32_scores)
+        if mode == "prefill" and kv_override is None:
+            new_cache = {"k": kT, "v": vT}
+    if cfg.padded_heads != cfg.num_heads:    # drop layout-padding heads:
+        kvh = max(cfg.num_kv_heads, 1)       # padding is group-major so the
+        gp = cfg.padded_heads // kvh         # GQA q->kv mapping is unchanged
+        gr = cfg.num_heads // kvh
+        o = o.reshape(b, kvh, gp, s, cfg.head_dim)[:, :, :gr].reshape(
+            b, cfg.num_heads, s, cfg.head_dim)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return x + jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(x.dtype)), new_cache
+
+
+def dense_ffn_block(p, x):
+    h = rms_norm(x, p["ln2"])
+    return x + swiglu(h, p["wg"], p["wu"], p["wd"])
+
+
+def moe_ffn_block(p, x, cfg, mctx):
+    h = rms_norm(x, p["ln2"])
+    return x + moe_lib.moe_ffn(p["moe"], h, cfg, mctx)
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _attn_shapes(cfg: ArchConfig, n: int) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "ln1": (n, d),
+        "wq": (n, d, cfg.padded_heads * hd),
+        "wk": (n, d, cfg.num_kv_heads * hd),
+        "wv": (n, d, cfg.num_kv_heads * hd),
+        "wo": (n, cfg.num_heads * hd, d),
+    }
+
+
+def _dense_ffn_shapes(cfg: ArchConfig, n: int) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {"ln2": (n, d), "wg": (n, d, f), "wu": (n, d, f), "wd": (n, f, d)}
+
+
+def _layer_group_shapes(cfg: ArchConfig) -> dict:
+    """Shape tree for the scanned decoder stack."""
+    if cfg.num_experts and cfg.moe_period > 1:
+        n = cfg.num_layers // cfg.moe_period
+        group: dict = {}
+        for j in range(cfg.moe_period - 1):
+            group[f"dense{j}"] = _attn_shapes(cfg, n) | _dense_ffn_shapes(cfg, n)
+        group["moe"] = (_attn_shapes(cfg, n)
+                        | {"ln2": (n, cfg.d_model),
+                           "moe": moe_lib.moe_param_shapes(cfg, n)})
+        return group
+    n = cfg.num_layers
+    if cfg.num_experts:
+        return {"moe": _attn_shapes(cfg, n)
+                | {"ln2": (n, cfg.d_model),
+                   "moe": moe_lib.moe_param_shapes(cfg, n)}}
+    return {"dense0": _attn_shapes(cfg, n) | _dense_ffn_shapes(cfg, n)}
+
+
+def decoder_param_shapes(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    shapes: dict = {"embed": (cfg.padded_vocab, d),
+                    "ln_f": (d,),
+                    "layers": _layer_group_shapes(cfg)}
+    if not cfg.tie_embeddings:
+        shapes["unembed"] = (d, cfg.padded_vocab)
+    if cfg.family == "vlm":
+        shapes["img_proj"] = (VIT_STUB_DIM, d)
+    return shapes
+
+
+def _attn_specs(dp) -> dict:
+    return {"ln1": P(None, None),
+            "wq": P(None, dp, "model"), "wk": P(None, dp, "model"),
+            "wv": P(None, dp, "model"), "wo": P(None, "model", dp)}
+
+
+def _dense_ffn_specs(dp) -> dict:
+    return {"ln2": P(None, None), "wg": P(None, dp, "model"),
+            "wu": P(None, dp, "model"), "wd": P(None, "model", dp)}
+
+
+def decoder_param_specs(cfg: ArchConfig, mctx: MeshCtx) -> dict:
+    dp = mctx.dp if cfg.fsdp else None
+    layers: dict = {}
+    group = _layer_group_shapes(cfg)
+    for name in group:
+        if name.startswith("dense"):
+            layers[name] = _attn_specs(dp) | _dense_ffn_specs(dp)
+        else:
+            layers[name] = _attn_specs(dp) | {
+                "ln2": P(None, None), "moe": moe_lib.moe_param_specs(cfg, dp)}
+    specs: dict = {"embed": P("model", None), "ln_f": P(None),
+                   "layers": layers}
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(None, "model")
+    if cfg.family == "vlm":
+        specs["img_proj"] = P(None, None)
+    return specs
+
+
+def _init_from_shapes(shapes, key, dtype, scale: float = 0.02):
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, shp in zip(keys, leaves):
+        if len(shp) >= 2:
+            out.append((jax.random.normal(k, shp, jnp.float32) * scale
+                        ).astype(dtype))
+        else:                                       # norms start at 1
+            out.append(jnp.ones(shp, dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def init_decoder_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    return _init_from_shapes(decoder_param_shapes(cfg), key,
+                             jnp.dtype(cfg.param_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Stack execution
+# ---------------------------------------------------------------------------
+
+def _group_body(cfg: ArchConfig, mctx: MeshCtx, mode: str):
+    """Body applied to one scanned group (1 layer, or moe_period layers)."""
+
+    def body(x, gp, positions, gcache, t):
+        new_cache = {}
+        for name in sorted(gp):        # dense0..denseK then moe (sorted ok)
+            p = gp[name]
+            c = gcache.get(name) if gcache else None
+            x, nc = attn_block(p, x, cfg, mode=mode, positions=positions,
+                               cache=c, t=t, mctx=mctx)
+            if name.startswith("dense"):
+                x = dense_ffn_block(p, x)
+            else:
+                x = moe_ffn_block(p, x, cfg, mctx)
+            new_cache[name] = nc
+        return x, new_cache
+
+    return body
+
+
+def _run_stack(params, x, cfg: ArchConfig, mctx: MeshCtx, mode: str,
+               positions, caches=None, t=None):
+    body = _group_body(cfg, mctx, mode)
+
+    def scan_fn(carry, xs):
+        gp, gcache = xs
+        y, nc = body(carry, gp, positions, gcache, t)
+        return y, nc
+
+    if cfg.remat != "none":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots" else None)
+        scan_fn = jax.checkpoint(scan_fn, policy=policy,
+                                 prevent_cse=False)
+    if not cfg.scan_layers:     # unrolled: for roofline cost accounting
+        return _unrolled(scan_fn, x, params["layers"], caches)
+    if caches is None:
+        x, new_caches = lax.scan(
+            lambda c, gp: scan_fn(c, (gp, {k: None for k in gp})),
+            x, params["layers"])
+    else:
+        x, new_caches = lax.scan(scan_fn, x, (params["layers"], caches))
+    return x, new_caches
+
+
+def scan_or_unroll(cfg: ArchConfig, fn, x, xs):
+    """lax.scan, or an unrolled python loop when cfg.scan_layers=False
+    (roofline accounting — see _unrolled)."""
+    if cfg.scan_layers:
+        return lax.scan(fn, x, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x, y = fn(x, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        return x, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return x, None
+
+
+def _unrolled(scan_fn, x, stacked, caches):
+    """Python-loop execution of a stacked layer group (same math as scan).
+
+    XLA's cost_analysis counts a while-loop body once regardless of trip
+    count; the roofline tool lowers shallow *unrolled* variants so per-layer
+    costs appear explicitly (EXPERIMENTS.md §Roofline methodology)."""
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(n):
+        gp = jax.tree.map(lambda a: a[i], stacked)
+        gcache = (jax.tree.map(lambda a: a[i], caches) if caches is not None
+                  else {k: None for k in gp})
+        x, nc = scan_fn(x, (gp, gcache))
+        ys.append(nc)
+    stacked_ys = jax.tree.map(lambda *a: jnp.stack(a), *ys) \
+        if ys and jax.tree.leaves(ys[0]) else ys[0]
+    return x, stacked_ys
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(params, tokens, cfg: ArchConfig):
+    return params["embed"].astype(cfg.compute_dtype)[tokens]
+
+
+def _unembed_matrix(params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def _prepend_images(params, x_tok, batch, cfg: ArchConfig):
+    if cfg.family != "vlm":
+        return x_tok, None
+    img = batch["img_emb"].astype(cfg.compute_dtype)
+    img_x = jnp.einsum("bnd,dm->bnm", img,
+                       params["img_proj"].astype(cfg.compute_dtype))
+    return jnp.concatenate([img_x, x_tok], axis=1), img.shape[1]
+
+
+# ---------------------------------------------------------------------------
+# Public decoder entry points
+# ---------------------------------------------------------------------------
+
+def decoder_loss(params, batch, cfg: ArchConfig, mctx: MeshCtx) -> jax.Array:
+    tokens = batch["tokens"]
+    b, s_tok = tokens.shape
+    x = _embed_tokens(params, tokens, cfg)
+    x, n_img = _prepend_images(params, x, batch, cfg)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    x, _ = _run_stack(params, x, cfg, mctx, "train", positions)
+    x = rms_norm(x, params["ln_f"])
+
+    # next-token prediction on the text positions only
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    weights = jnp.ones((b, s_tok), jnp.float32).at[:, -1].set(0.0)
+    h_txt = x[:, n_img:] if n_img else x
+    loss_sum = chunked_softmax_xent(
+        h_txt.reshape(b * s_tok, -1), _unembed_matrix(params, cfg),
+        labels.reshape(-1), weights.reshape(-1), cfg.loss_chunk)
+    return loss_sum / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def decoder_prefill(params, batch, cfg: ArchConfig, mctx: MeshCtx):
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg)
+    x, n_img = _prepend_images(params, x, batch, cfg)
+    positions = jnp.arange(x.shape[1])
+    x, caches = _run_stack(params, x, cfg, mctx, "prefill", positions)
+    x = rms_norm(x, params["ln_f"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                        _unembed_matrix(params, cfg).astype(jnp.float32))
+    return logits, caches
+
+
+def decoder_decode_step(params, caches, tokens, t, cfg: ArchConfig,
+                        mctx: MeshCtx):
+    """tokens: [B, 1] new token ids; t: scalar absolute position."""
+    x = _embed_tokens(params, tokens, cfg)
+    positions = jnp.asarray(t)[None]
+    x, new_caches = _run_stack(params, x, cfg, mctx, "decode", positions,
+                               caches=caches, t=t)
+    x = rms_norm(x, params["ln_f"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                        _unembed_matrix(params, cfg).astype(jnp.float32))
+    return logits, new_caches
+
+
+def decoder_cache_shapes(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    """Abstract KV-cache tree matching the scanned stack layout."""
+    group = _layer_group_shapes(cfg)
+    n_slots = kv_cache_len(cfg, seq_len)
+    caches = {}
+    for name, shapes in group.items():
+        n = shapes["ln1"][0]
+        kv = (n, batch, cfg.num_kv_heads, n_slots, cfg.head_dim)
+        caches[name] = {"k": kv, "v": kv}
+    return caches
+
+
+def kv_spec(cfg: ArchConfig, mctx: MeshCtx, n_slots: int,
+            lead_dims: int = 1) -> P:
+    """Pick the model-axis placement for a KV cache [*, B, K, S, Dh]:
+    shard heads when they divide the axis, else the slot (sequence) dim —
+    split-KV decode, FlashDecoding-style."""
+    lead = (None,) * lead_dims
+    tp = mctx.tp_size
+    if cfg.num_kv_heads % tp == 0:
+        return P(*lead, mctx.dp, "model", None, None)
+    if n_slots % tp == 0:
+        return P(*lead, mctx.dp, None, "model", None)
+    return P(*lead, mctx.dp, None, None, None)
+
+
+def decoder_cache_specs(cfg: ArchConfig, mctx: MeshCtx,
+                        seq_len: int = 0) -> dict:
+    group = _layer_group_shapes(cfg)
+    n_slots = kv_cache_len(cfg, seq_len) if seq_len else 0
+    spec = kv_spec(cfg, mctx, n_slots)
+    return {name: {"k": spec, "v": spec} for name in group}
+
+
+# ---------------------------------------------------------------------------
+# Whisper-style encoder-decoder
+# ---------------------------------------------------------------------------
+
+def encdec_param_shapes(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    ne, nd = cfg.enc_layers, cfg.num_layers
+    enc = _attn_shapes(cfg, ne) | _dense_ffn_shapes(cfg, ne)
+    dec = (_attn_shapes(cfg, nd)
+           | {f"x_{k}": v for k, v in _attn_shapes(cfg, nd).items()}
+           | _dense_ffn_shapes(cfg, nd))
+    return {"embed": (cfg.padded_vocab, d),
+            "frame_proj": (VIT_STUB_DIM, d),
+            "enc_layers": enc, "dec_layers": dec,
+            "ln_enc": (d,), "ln_f": (d,),
+            "unembed": (d, cfg.padded_vocab)}
+
+
+def encdec_param_specs(cfg: ArchConfig, mctx: MeshCtx) -> dict:
+    dp = mctx.dp if cfg.fsdp else None
+    enc = _attn_specs(dp) | _dense_ffn_specs(dp)
+    dec = (_attn_specs(dp)
+           | {f"x_{k}": v for k, v in _attn_specs(dp).items()}
+           | _dense_ffn_specs(dp))
+    return {"embed": P("model", None), "frame_proj": P(None, None),
+            "enc_layers": enc, "dec_layers": dec,
+            "ln_enc": P(None), "ln_f": P(None),
+            "unembed": P(None, "model")}
+
+
+def init_encdec_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    return _init_from_shapes(encdec_param_shapes(cfg), key,
+                             jnp.dtype(cfg.param_dtype))
+
+
+def _encode(params, frames, cfg: ArchConfig, mctx: MeshCtx):
+    x = jnp.einsum("bsd,dm->bsm", frames.astype(cfg.compute_dtype),
+                   params["frame_proj"].astype(cfg.compute_dtype))
+    x = x + sinusoid_positions(x.shape[1], cfg.d_model
+                               ).astype(cfg.compute_dtype)[None]
+
+    def body(c, p):
+        y, _ = attn_block(p, c, cfg, mode="train", positions=None, cache=None,
+                          t=None, use_rotary=False, causal=False)
+        return dense_ffn_block(p, y), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = scan_or_unroll(cfg, body, x, params["enc_layers"])
+    return rms_norm(x, params["ln_enc"])
+
+
+def _dec_body(cfg, mctx, mode, enc_kv=None):
+    def body(x, p, positions, cache, t):
+        c_self = cache.get("self") if cache else None
+        x, nc_self = attn_block(p, x, cfg, mode=mode, positions=positions,
+                                cache=c_self, t=t, use_rotary=True)
+        xp = {k[2:]: v for k, v in p.items() if k.startswith("x_")}
+        if enc_kv is not None:
+            kv = enc_kv
+        else:
+            kv = (cache["cross_k"], cache["cross_v"])
+        x, _ = attn_block(xp, x, cfg, mode=mode, positions=positions,
+                          cache=None, t=t, kv_override=kv)
+        x = dense_ffn_block(p, x)
+        return x, {"self": nc_self}
+    return body
+
+
+def encdec_loss(params, batch, cfg: ArchConfig, mctx: MeshCtx) -> jax.Array:
+    enc_out = _encode(params, batch["frames"], cfg, mctx)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(s)
+
+    def scan_fn(c, p):
+        kT = jnp.einsum("bsd,dh->bsh", enc_out,
+                        p["x_wk"].astype(enc_out.dtype)
+                        ).reshape(b, -1, cfg.num_kv_heads, cfg.head_dim)
+        vT = jnp.einsum("bsd,dh->bsh", enc_out,
+                        p["x_wv"].astype(enc_out.dtype)
+                        ).reshape(b, -1, cfg.num_kv_heads, cfg.head_dim)
+        body = _dec_body(cfg, mctx, "train",
+                         enc_kv=(kT.transpose(0, 2, 1, 3),
+                                 vT.transpose(0, 2, 1, 3)))
+        y, _ = body(c, p, positions, None, None)
+        return y, None
+
+    if cfg.remat != "none":
+        scan_fn = jax.checkpoint(scan_fn, prevent_cse=False)
+    x, _ = scan_or_unroll(cfg, scan_fn, x, params["dec_layers"])
+    x = rms_norm(x, params["ln_f"])
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    weights = jnp.ones((b, s), jnp.float32).at[:, -1].set(0.0)
+    loss_sum = chunked_softmax_xent(
+        x.reshape(b * s, -1), params["unembed"], labels.reshape(-1),
+        weights.reshape(-1), cfg.loss_chunk)
+    return loss_sum / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def encdec_prefill(params, batch, cfg: ArchConfig, mctx: MeshCtx):
+    enc_out = _encode(params, batch["frames"], cfg, mctx)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(s)
+
+    def scan_fn(c, p):
+        kT = jnp.einsum("bsd,dh->bsh", enc_out, p["x_wk"].astype(enc_out.dtype)
+                        ).reshape(b, -1, cfg.num_kv_heads, cfg.head_dim
+                                  ).transpose(0, 2, 1, 3)
+        vT = jnp.einsum("bsd,dh->bsh", enc_out, p["x_wv"].astype(enc_out.dtype)
+                        ).reshape(b, -1, cfg.num_kv_heads, cfg.head_dim
+                                  ).transpose(0, 2, 1, 3)
+        body = _dec_body(cfg, mctx, "prefill", enc_kv=(kT, vT))
+        y, nc = body(c, p, positions, None, None)
+        return y, (nc["self"], {"k": kT, "v": vT})
+
+    x, (self_c, cross_c) = scan_or_unroll(cfg, scan_fn, x,
+                                          params["dec_layers"])
+    x = rms_norm(x, params["ln_f"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                        params["unembed"].astype(jnp.float32))
+    caches = {"self": self_c, "cross_k": cross_c["k"], "cross_v": cross_c["v"]}
+    return logits, caches
+
+
+def encdec_decode_step(params, caches, tokens, t, cfg: ArchConfig,
+                       mctx: MeshCtx):
+    x = _embed_tokens(params, tokens, cfg)
+    positions = jnp.asarray(t)[None]
+    body = _dec_body(cfg, mctx, "decode")
+
+    def scan_fn(c, xs):
+        p, self_c, ck, cv = xs
+        y, nc = body(c, p, positions,
+                     {"self": self_c, "cross_k": ck, "cross_v": cv}, t)
+        return y, nc["self"]
+
+    x, new_self = scan_or_unroll(
+        cfg, scan_fn, x, (params["dec_layers"], caches["self"],
+                          caches["cross_k"], caches["cross_v"]))
+    x = rms_norm(x, params["ln_f"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                        params["unembed"].astype(jnp.float32))
+    return logits, {"self": new_self, "cross_k": caches["cross_k"],
+                    "cross_v": caches["cross_v"]}
+
+
+def encdec_cache_shapes(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    nd = cfg.num_layers
+    kv = (nd, batch, cfg.num_kv_heads, seq_len, cfg.head_dim)
+    xkv = (nd, batch, cfg.num_kv_heads, cfg.enc_seq, cfg.head_dim)
+    return {"self": {"k": kv, "v": kv}, "cross_k": xkv, "cross_v": xkv}
+
+
+def encdec_cache_specs(cfg: ArchConfig, mctx: MeshCtx,
+                       seq_len: int = 0) -> dict:
+    spec = kv_spec(cfg, mctx, seq_len)
+    xspec = kv_spec(cfg, mctx, cfg.enc_seq)
+    return {"self": {"k": spec, "v": spec}, "cross_k": xspec, "cross_v": xspec}

@@ -1,0 +1,377 @@
+"""LSM-tree state backend — the RocksDB analogue Justin's policy observes.
+
+Structure mirrors §3 of the paper:
+
+* **MemTable** — a sorted-run write buffer (vector-friendly replacement for
+  RocksDB's skip list; same asymptotics at our granularity).  Writes land
+  here; when full it is flushed to level 0.
+* **Block cache** — set-associative read cache with CLOCK replacement.  Its
+  hit rate is Justin's θ metric.
+* **Levels** — sorted SSTable runs with size-tiered compaction (fanout x per
+  level).  A read that misses memtable+cache probes levels top-down; every
+  level probed adds the slow-tier penalty to the access-latency metric τ.
+
+Byte accounting uses the paper's *logical* entry size (1000 B values, as in
+the §3 microbenchmarks) while physical storage keeps ``value_words`` int32
+words per entry, so cache-capacity ratios match the paper exactly at 1/64th
+the RAM (see DESIGN.md §3 "hardware adaptation").
+
+The batched sorted-run probe is the compute hot spot; its TPU Pallas kernel
+lives in ``repro/kernels/sorted_probe`` (this CPU implementation is the
+oracle and uses the same algorithm).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+LOGICAL_ENTRY_BYTES = 1_000          # paper §3: 1000 B events
+MEMTABLE_GRANULARITY_MB = 64         # first-level SSTable size (paper §3)
+CACHE_OVERHEAD = 2.5                 # block granularity + index/filter share
+                                     # (RocksDB caches blocks, not entries)
+
+
+@dataclass
+class LSMMetrics:
+    reads: int = 0
+    writes: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    memtable_hits: int = 0
+    level_probes: int = 0            # SSTable lookups (slow tier)
+    flushes: int = 0
+    compactions: int = 0
+    access_latency_total_ms: float = 0.0
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+    def reset(self) -> None:
+        for k in self.__dict__:
+            setattr(self, k, 0 if not k.startswith("access") else 0.0)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        tot = self.cache_hits + self.cache_misses
+        return self.cache_hits / tot if tot else 1.0
+
+    @property
+    def avg_access_latency_ms(self) -> float:
+        tot = self.reads + self.writes
+        return self.access_latency_total_ms / tot if tot else 0.0
+
+
+@dataclass(frozen=True)
+class LatencyModel:
+    """Calibrated per-access costs (ms).  The slow tier models SSD/host-DRAM
+    fetches (a cold SSTable block read on the paper's testbed is ~0.5 ms
+    including read amplification); write costs amortize WAL + flush +
+    compaction work, which the store *charges as it actually happens*, so
+    memtable size shapes write performance the way §3 observes."""
+    memtable_ms: float = 0.002
+    cache_ms: float = 0.002
+    level_ms: float = 0.5            # per level probed on a miss
+    bloom_ms: float = 0.001          # bloom check for an absent key
+    bloom_fp: float = 0.01           # bloom false-positive rate
+    meta_ratio: float = 8.0          # data entries per filter/index-block
+                                     # cache-entry-equivalent: metadata
+                                     # (blooms + index blocks) competes for
+                                     # block cache at ~1/8 the footprint
+    meta_read_frac: float = 0.5      # cost of a filter-block disk read,
+                                     # as a fraction of a data-block read
+    write_ms: float = 0.07           # WAL append share
+    flush_ms: float = 0.14           # per entry flushed to L0
+    compact_ms: float = 0.05         # per entry rewritten in a merge
+    flush_fixed_ms: float = 150.0    # write-stall per flush (small memtables
+                                     # flush more often -> §3 (1;128) dip)
+
+
+class LSMStore:
+    """Vectorized LSM over int64 keys -> fixed-width int32 value vectors."""
+
+    def __init__(self, memory_mb: float, *, value_words: int = 4,
+                 fanout: int = 8, latency: LatencyModel | None = None,
+                 entry_bytes: int = LOGICAL_ENTRY_BYTES, seed: int = 0):
+        self.value_words = value_words
+        self.entry_bytes = entry_bytes            # logical entry size
+        self._wscale = entry_bytes / LOGICAL_ENTRY_BYTES  # IO-cost scaling
+        self.latency = latency or LatencyModel()
+        self.metrics = LSMMetrics()
+        self.compact_filter = None                # optional keys->keep mask
+        self._configure_memory(memory_mb)
+        self.levels: list[tuple[np.ndarray, np.ndarray]] = []
+        self.fanout = fanout
+        self._empty()
+
+    # -- memory layout (paper §3: memtable <= 64 MB, >= half to cache, pow2) --
+    def _configure_memory(self, memory_mb: float) -> None:
+        self.memory_mb = float(memory_mb)
+        mem_budget = memory_mb * 1024 * 1024
+        memtable_b = MEMTABLE_GRANULARITY_MB * 1024 * 1024
+        while memtable_b >= mem_budget / 2:    # cache gets MORE than half
+            memtable_b //= 2                   # (paper §3: 128 -> 32+96)
+        cache_b = mem_budget - memtable_b
+        self.memtable_cap = max(64, int(memtable_b // self.entry_bytes))
+        n_cache = max(64, int(cache_b // (self.entry_bytes
+                                          * CACHE_OVERHEAD)))
+        self.cache_ways = 8
+        self.cache_sets = max(8, n_cache // self.cache_ways)
+
+    def _empty(self) -> None:
+        self.mem_keys = np.empty(self.memtable_cap, np.int64)
+        self.mem_vals = np.empty((self.memtable_cap, self.value_words),
+                                 np.int32)
+        self.mem_n = 0
+        self.cache_keys = np.full((self.cache_sets, self.cache_ways), -1,
+                                  np.int64)
+        self.cache_vals = np.zeros(
+            (self.cache_sets, self.cache_ways, self.value_words), np.int32)
+        self.cache_ref = np.zeros((self.cache_sets, self.cache_ways), np.int8)
+        self.cache_hand = np.zeros(self.cache_sets, np.int32)
+
+    # ------------------------------------------------------------------ util
+    @property
+    def entry_count(self) -> int:
+        return self.mem_n + sum(len(k) for k, _ in self.levels)
+
+    def resize(self, memory_mb: float) -> None:
+        """Vertical rescale: rebuild memtable/cache under the new budget,
+        spilling the old memtable into level 0 (a Flink-style reconfig)."""
+        keys, vals = self.mem_keys[:self.mem_n], self.mem_vals[:self.mem_n]
+        if self.mem_n:
+            self._push_run(keys.copy(), vals.copy())
+        self._configure_memory(memory_mb)
+        self._empty()
+
+    def items(self) -> tuple[np.ndarray, np.ndarray]:
+        """All live (key, value) pairs — used for state re-partitioning."""
+        ks = [self.mem_keys[:self.mem_n]] + [k for k, _ in self.levels]
+        vs = [self.mem_vals[:self.mem_n]] + [v for _, v in self.levels]
+        if not ks:
+            return (np.empty(0, np.int64),
+                    np.empty((0, self.value_words), np.int32))
+        keys = np.concatenate(ks)
+        vals = np.concatenate(vs)
+        # newest first; keep first occurrence of each key
+        uniq, idx = np.unique(keys, return_index=True)
+        return uniq, vals[idx]
+
+    # ------------------------------------------------------------- write path
+    def put_batch(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        n = len(keys)
+        self.metrics.writes += n
+        self.metrics.access_latency_total_ms += \
+            n * self.latency.write_ms * self._wscale
+        off = 0
+        while off < n:
+            room = self.memtable_cap - self.mem_n
+            take = min(room, n - off)
+            sl = slice(off, off + take)
+            self.mem_keys[self.mem_n:self.mem_n + take] = keys[sl]
+            self.mem_vals[self.mem_n:self.mem_n + take] = vals[sl]
+            self.mem_n += take
+            off += take
+            if self.mem_n >= self.memtable_cap:
+                self._flush()
+        # write-through invalidate/update of cached copies
+        self._cache_update(keys, vals)
+
+    def _flush(self) -> None:
+        if self.mem_n == 0:
+            return
+        keys = self.mem_keys[:self.mem_n]
+        vals = self.mem_vals[:self.mem_n]
+        # last write wins within the buffer
+        order = np.argsort(keys[::-1], kind="stable")
+        rk, rv = keys[::-1][order], vals[::-1][order]
+        uniq, first = np.unique(rk, return_index=True)
+        if self.compact_filter is not None and len(uniq):
+            keep = self.compact_filter(uniq)
+            uniq, first = uniq[keep], first[keep]
+        self._push_run(uniq, rv[first])
+        self.mem_n = 0
+        self.metrics.flushes += 1
+        self.metrics.access_latency_total_ms += \
+            (len(uniq) * self.latency.flush_ms
+             + self.latency.flush_fixed_ms) * self._wscale
+
+    def _push_run(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        self.levels.insert(0, (keys, vals))
+        # size-tiered compaction: merge while a level outgrows fanout^i
+        base = max(self.memtable_cap, 1)
+        i = 0
+        while i < len(self.levels) - 1:
+            if len(self.levels[i][0]) >= base * (self.fanout ** i):
+                self._merge_levels(i)
+                self.metrics.compactions += 1
+            else:
+                i += 1
+
+    def _merge_levels(self, i: int) -> None:
+        k1, v1 = self.levels[i]          # newer
+        k2, v2 = self.levels[i + 1]      # older
+        keys = np.concatenate([k1, k2])
+        vals = np.concatenate([v1, v2])
+        uniq, idx = np.unique(keys, return_index=True)  # newer first => wins
+        if self.compact_filter is not None and len(uniq):
+            keep = self.compact_filter(uniq)
+            uniq, idx = uniq[keep], idx[keep]
+        self.levels[i + 1] = (uniq, vals[idx])
+        del self.levels[i]
+        self.metrics.access_latency_total_ms += \
+            len(keys) * self.latency.compact_ms * self._wscale
+
+    # -------------------------------------------------------------- read path
+    def get_batch(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (values [n, V], found mask [n]) and updates θ/τ metrics."""
+        n = len(keys)
+        self.metrics.reads += n
+        out = np.zeros((n, self.value_words), np.int32)
+        found = np.zeros(n, bool)
+        lat = 0.0
+
+        # 1. memtable (newest data wins: last occurrence among duplicates)
+        if self.mem_n:
+            mk = self.mem_keys[:self.mem_n]
+            srt = np.argsort(mk, kind="stable")
+            pos = np.searchsorted(mk[srt], keys, side="right") - 1
+            pos_c = np.clip(pos, 0, self.mem_n - 1)
+            hit = (pos >= 0) & (mk[srt][pos_c] == keys)
+            if hit.any():
+                out[hit] = self.mem_vals[srt[pos_c[hit]]]
+                found |= hit
+                self.metrics.memtable_hits += int(hit.sum())
+        lat += n * self.latency.memtable_ms
+
+        # 2. block cache
+        todo = ~found
+        if todo.any():
+            tk = keys[todo]
+            sets = self._sets(tk)
+            match = self.cache_keys[sets] == tk[:, None]        # [m, ways]
+            hit = match.any(axis=1)
+            way = match.argmax(axis=1)
+            vals = self.cache_vals[sets, way]
+            self.cache_ref[sets[hit], way[hit]] = 1
+            sub = np.where(todo)[0]
+            out[sub[hit]] = vals[hit]
+            found[sub[hit]] = True
+            self.metrics.cache_hits += int(hit.sum())
+            self.metrics.cache_misses += int((~hit).sum())
+            lat += len(tk) * self.latency.cache_ms
+
+            # 3. levels (slow tier) for cache misses.  Bloom filters guard
+            # each SSTable: absent keys cost a filter check (plus the
+            # false-positive rate of real probes) instead of a full read.
+            rem = sub[~hit]
+            if len(rem):
+                probe_keys = keys[rem]
+                got = np.zeros(len(rem), bool)
+                gvals = np.zeros((len(rem), self.value_words), np.int32)
+                probes = 0.0
+                blooms = 0
+                for (lk, lv) in self.levels:
+                    live = ~got
+                    if not live.any():
+                        break
+                    pos = np.searchsorted(lk, probe_keys[live])
+                    pos_c = np.clip(pos, 0, len(lk) - 1) if len(lk) else pos
+                    h = (lk[pos_c] == probe_keys[live]) if len(lk) else \
+                        np.zeros(int(live.sum()), bool)
+                    n_live = int(live.sum())
+                    n_hit = int(h.sum())
+                    # present keys pass the bloom filter and read the block;
+                    # absent keys mostly stop at the filter — but the filter/
+                    # index blocks themselves need block-cache residency:
+                    # with a small cache a share of filter checks also hits
+                    # the slow tier (RocksDB filter-block eviction)
+                    meta_ws = max(1.0, len(lk) / self.latency.meta_ratio)
+                    meta_cover = min(1.0, self.cache_capacity / meta_ws)
+                    probes += n_hit + self.latency.bloom_fp * (n_live - n_hit)
+                    probes += (1.0 - meta_cover) \
+                        * self.latency.meta_read_frac * n_live
+                    blooms += n_live
+                    li = np.where(live)[0]
+                    gvals[li[h]] = lv[pos_c[h]]
+                    got[li[h]] = True
+                out[rem[got]] = gvals[got]
+                found[rem[got]] = True
+                self.metrics.level_probes += int(probes)
+                lat += (probes * self.latency.level_ms
+                        + blooms * self.latency.bloom_ms)
+                # admit fetched entries into the cache
+                if got.any():
+                    self._cache_update(probe_keys[got], gvals[got])
+
+        self.metrics.access_latency_total_ms += lat
+        return out, found
+
+    # ----------------------------------------------------------------- cache
+    def _sets(self, keys: np.ndarray) -> np.ndarray:
+        h = keys.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+        h ^= h >> np.uint64(29)
+        return ((h >> np.uint64(1)).astype(np.int64) % self.cache_sets)
+
+    def _cache_update(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        """Insert/overwrite entries (CLOCK eviction within each set)."""
+        if len(keys) == 0:
+            return
+        # dedupe (last wins) to avoid write conflicts in the vectorized scatter
+        uniq, idx = np.unique(keys[::-1], return_index=True)
+        keys = uniq
+        vals = vals[::-1][idx]
+        sets = self._sets(keys)
+        match = self.cache_keys[sets] == keys[:, None]
+        hit = match.any(axis=1)
+        way = match.argmax(axis=1)
+        self.cache_vals[sets[hit], way[hit]] = vals[hit]
+        self.cache_ref[sets[hit], way[hit]] = 1
+        # misses: CLOCK — evict first way with ref=0, clearing refs as we pass
+        for s, k, v in zip(sets[~hit], keys[~hit], vals[~hit]):
+            hand = self.cache_hand[s]
+            for _ in range(2 * self.cache_ways):
+                if self.cache_ref[s, hand] == 0:
+                    break
+                self.cache_ref[s, hand] = 0
+                hand = (hand + 1) % self.cache_ways
+            self.cache_keys[s, hand] = k
+            self.cache_vals[s, hand] = v
+            self.cache_ref[s, hand] = 1
+            self.cache_hand[s] = (hand + 1) % self.cache_ways
+
+    @property
+    def cache_capacity(self) -> int:
+        return self.cache_sets * self.cache_ways
+
+    def prewarm_cache(self, keys: np.ndarray, vals: np.ndarray,
+                      rng: np.random.Generator | None = None) -> None:
+        """Fill the cache to capacity with a uniform sample of the live
+        entries — steady-state emulation so short observation windows see
+        the equilibrium hit rate rather than a cold-start transient."""
+        if len(keys) == 0:
+            return
+        cap = self.cache_capacity
+        if len(keys) > cap:
+            rng = rng or np.random.default_rng(0)
+            idx = rng.choice(len(keys), cap, replace=False)
+            keys, vals = keys[idx], vals[idx]
+        self._cache_update(keys, vals)
+        self.metrics.reset()
+
+    # ------------------------------------------------------------- snapshots
+    def snapshot(self) -> dict:
+        """Epoch-barrier snapshot (Flink-checkpoint analogue)."""
+        keys, vals = self.items()
+        return {"keys": keys, "vals": vals, "memory_mb": self.memory_mb,
+                "value_words": self.value_words}
+
+    @classmethod
+    def restore(cls, snap: dict, *, memory_mb: float | None = None,
+                **kw) -> "LSMStore":
+        store = cls(memory_mb if memory_mb is not None else snap["memory_mb"],
+                    value_words=snap["value_words"], **kw)
+        if len(snap["keys"]):
+            store._push_run(np.asarray(snap["keys"], np.int64),
+                            np.asarray(snap["vals"], np.int32))
+        return store

@@ -1,0 +1,296 @@
+"""Streaming operators.  Stateless operators never touch the state backend
+(Justin strips their managed memory — Takeaway 1); stateful operators access
+their per-task ``LSMStore`` with the read/write profile the paper's §3
+microbenchmarks characterize:
+
+* ``KeyedStateOp(mode="read")``   — pure lookups (Read workload)
+* ``KeyedStateOp(mode="write")``  — blind writes (Write workload)
+* ``KeyedStateOp(mode="update")`` — read-modify-write (Update workload)
+* ``WindowAggOp`` / ``SessionWindowOp`` / ``JoinOp`` — the Nexmark patterns.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.state.lsm import LSMStore, LatencyModel
+from repro.streaming.events import EventBatch, PAYLOAD_WORDS
+
+
+class Operator:
+    """Base: subclasses implement process(task_state, batch) -> out batch."""
+    stateful = False
+    cpu_cost_us = 1.0                   # per-event CPU service time component
+    entry_bytes = 1000                  # logical state-entry size (§3: 1 KB)
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def make_state(self, memory_mb: float, seed: int = 0) -> LSMStore | None:
+        if not self.stateful:
+            return None
+        return LSMStore(memory_mb, value_words=PAYLOAD_WORDS,
+                        entry_bytes=self.entry_bytes, seed=seed)
+
+    def process(self, state: LSMStore | None, batch: EventBatch) -> EventBatch:
+        raise NotImplementedError
+
+    def warm_state(self, state: LSMStore, rng: np.random.Generator) -> None:
+        """Optional pre-population (paper §3 pre-populates every key)."""
+
+
+class SourceOp(Operator):
+    """Workload injector: emits up to ``rate`` events/s, subject to
+    backpressure (paper: sources are excluded from the resource count)."""
+    cpu_cost_us = 0.2
+
+    def __init__(self, name: str, generator: Callable[[int, float], EventBatch]):
+        super().__init__(name)
+        self.generator = generator
+
+    def emit(self, n: int, now_s: float) -> EventBatch:
+        return self.generator(n, now_s)
+
+    def process(self, state, batch):
+        return batch
+
+
+class MapOp(Operator):
+    def __init__(self, name: str, fn: Callable[[EventBatch], EventBatch],
+                 cpu_cost_us: float = 1.2):
+        super().__init__(name)
+        self.fn = fn
+        self.cpu_cost_us = cpu_cost_us
+
+    def process(self, state, batch):
+        return self.fn(batch)
+
+
+class FilterOp(Operator):
+    def __init__(self, name: str, pred: Callable[[EventBatch], np.ndarray],
+                 cpu_cost_us: float = 0.8):
+        super().__init__(name)
+        self.pred = pred
+        self.cpu_cost_us = cpu_cost_us
+
+    def process(self, state, batch):
+        return batch.select(self.pred(batch))
+
+
+class FlatMapOp(Operator):
+    def __init__(self, name: str, fn: Callable[[EventBatch], EventBatch],
+                 cpu_cost_us: float = 1.5):
+        super().__init__(name)
+        self.fn = fn
+        self.cpu_cost_us = cpu_cost_us
+
+    def process(self, state, batch):
+        return self.fn(batch)
+
+
+class SinkOp(Operator):
+    cpu_cost_us = 0.5
+
+    def __init__(self, name: str = "sink"):
+        super().__init__(name)
+        self.received = 0
+
+    def process(self, state, batch):
+        self.received += len(batch)
+        return EventBatch.empty()
+
+
+@dataclass
+class _StateProfile:
+    keyspace: int = 1_000_000
+    prepopulate: bool = True
+
+
+class KeyedStateOp(Operator):
+    """§3 microbenchmark operator: one state access per event."""
+    stateful = True
+    cpu_cost_us = 2.0
+
+    def __init__(self, name: str, mode: str, keyspace: int = 1_000_000,
+                 prepopulate: bool = True):
+        super().__init__(name)
+        assert mode in ("read", "write", "update")
+        self.mode = mode
+        self.keyspace = keyspace
+        self.prepopulate = prepopulate
+
+    def warm_state(self, state: LSMStore, rng: np.random.Generator) -> None:
+        if not self.prepopulate:
+            return
+        keys = np.arange(self.keyspace, dtype=np.int64)
+        vals = rng.integers(0, 2**31 - 1, (self.keyspace, PAYLOAD_WORDS),
+                            dtype=np.int64).astype(np.int32)
+        for off in range(0, self.keyspace, 1 << 16):
+            state.put_batch(keys[off:off + (1 << 16)],
+                            vals[off:off + (1 << 16)])
+        state.metrics.reset()
+
+    def process(self, state: LSMStore, batch: EventBatch) -> EventBatch:
+        if self.mode == "read":
+            vals, _ = state.get_batch(batch.key)
+            out = batch.value + vals[:, :batch.value.shape[1]]
+            return EventBatch(batch.key, out.astype(np.int32), batch.ts,
+                              batch.kind)
+        if self.mode == "write":
+            state.put_batch(batch.key, batch.value)
+            return batch
+        vals, _ = state.get_batch(batch.key)           # update = read + write
+        new = (vals + batch.value).astype(np.int32)
+        state.put_batch(batch.key, new)
+        return EventBatch(batch.key, new, batch.ts, batch.kind)
+
+
+class WindowAggOp(Operator):
+    """Keyed tumbling/sliding window aggregation (count/sum).
+
+    State key = (key, window_id); each event is a read-modify-write.  Sliding
+    windows touch size/slide window ids per event — q5's 'complex access
+    pattern'.  Window results are emitted when event time passes window end.
+    """
+    stateful = True
+    cpu_cost_us = 2.5
+    entry_bytes = 500                    # window aggregates are small records
+
+    def __init__(self, name: str, size_s: float, slide_s: float | None = None,
+                 emit: bool = True):
+        super().__init__(name)
+        self.size_s = size_s
+        self.slide_s = slide_s or size_s
+        self.emit = emit
+        self._watermark = 0.0
+
+    def _state_key(self, keys, window_id):
+        return keys * np.int64(1 << 20) + (window_id % (1 << 20))
+
+    def process(self, state: LSMStore, batch: EventBatch) -> EventBatch:
+        if len(batch) == 0:
+            return EventBatch.empty()
+        # compaction filter: drop windows older than the retention horizon
+        if len(batch):
+            wm = int(batch.ts.max() // self.size_s)
+            state.compact_filter = \
+                lambda keys, w=wm: (keys % (1 << 20)) >= max(0, w - 4)
+        n_windows = max(1, int(round(self.size_s / self.slide_s)))
+        outs = []
+        for w in range(n_windows):
+            wid = ((batch.ts - w * self.slide_s) // self.size_s).astype(np.int64)
+            sk = self._state_key(batch.key, wid)
+            vals, _ = state.get_batch(sk)
+            vals[:, 0] += 1                             # count
+            vals[:, 1] = (vals[:, 1] + batch.value[:, 0]).astype(np.int32)
+            state.put_batch(sk, vals)
+            if w == 0:
+                outs.append(EventBatch(batch.key, vals, batch.ts, batch.kind))
+        self._watermark = max(self._watermark, float(batch.ts.max()))
+        out = outs[0]
+        if not self.emit:
+            return EventBatch.empty()
+        # emit current aggregates for closed-ish windows (downstream load)
+        return out
+
+
+class SessionWindowOp(Operator):
+    """q11: per-user session tracking — update-heavy, working set = active
+    users (the memory-pressured operator where Justin's scale-up wins)."""
+    stateful = True
+    cpu_cost_us = 3.0
+    entry_bytes = 500                    # session records are small
+
+    def __init__(self, name: str, gap_s: float = 10.0,
+                 keyspace: int = 1_000_000):
+        super().__init__(name)
+        self.gap_s = gap_s
+        self.keyspace = keyspace
+
+    def warm_state(self, state: LSMStore, rng: np.random.Generator) -> None:
+        keys = np.arange(self.keyspace, dtype=np.int64)
+        vals = np.zeros((self.keyspace, PAYLOAD_WORDS), np.int32)
+        for off in range(0, self.keyspace, 1 << 16):
+            state.put_batch(keys[off:off + (1 << 16)],
+                            vals[off:off + (1 << 16)])
+        state.metrics.reset()
+
+    def process(self, state: LSMStore, batch: EventBatch) -> EventBatch:
+        if len(batch) == 0:
+            return EventBatch.empty()
+        vals, found = state.get_batch(batch.key)
+        last_ts = vals[:, 0].astype(np.float64)
+        expired = (batch.ts - last_ts) > self.gap_s
+        emitted = batch.select(expired & found)          # closed sessions
+        vals[:, 0] = np.minimum(batch.ts, 2**30).astype(np.int32)
+        vals[:, 1] = np.where(expired, 1, vals[:, 1] + 1)  # bids in session
+        state.put_batch(batch.key, vals)
+        return emitted
+
+
+class JoinOp(Operator):
+    """Two-sided keyed join.  Events with kind==left_kind are stored and
+    probe the right side (and vice versa).  ``windowed=True`` scopes state
+    keys by tumbling window id (q8); otherwise the join is incremental and
+    unbounded (q3)."""
+    stateful = True
+    cpu_cost_us = 3.0
+    entry_bytes = 500                    # join-side records are small
+
+    def __init__(self, name: str, left_kind: int, right_kind: int,
+                 window_s: float | None = None, keyspace: int = 0):
+        super().__init__(name)
+        self.left_kind = left_kind
+        self.right_kind = right_kind
+        self.window_s = window_s
+        self.keyspace = keyspace         # pre-populated steady-state size
+
+    def warm_state(self, state, rng: np.random.Generator) -> None:
+        """Steady-state pre-population: both sides of the live window(s) —
+        the paper's queries run for minutes before each decision window."""
+        if not self.keyspace:
+            return
+        wids = (0, 1) if self.window_s is not None else (None,)
+        for side in (0, 1):
+            for wid in wids:
+                keys = np.arange(self.keyspace, dtype=np.int64) * 4 + side
+                if wid is not None:
+                    keys = keys * np.int64(1 << 16) + wid
+                vals = rng.integers(0, 2**31 - 1,
+                                    (self.keyspace, PAYLOAD_WORDS),
+                                    dtype=np.int64).astype(np.int32)
+                for off in range(0, self.keyspace, 1 << 17):
+                    state.put_batch(keys[off:off + (1 << 17)],
+                                    vals[off:off + (1 << 17)])
+        state.metrics.reset()
+
+    def _skey(self, keys, ts, side: int) -> np.ndarray:
+        k = keys * np.int64(4) + side
+        if self.window_s is not None:
+            wid = (ts // self.window_s).astype(np.int64)
+            k = k * np.int64(1 << 16) + (wid % (1 << 16))
+        return k
+
+    def process(self, state: LSMStore, batch: EventBatch) -> EventBatch:
+        if len(batch) == 0:
+            return EventBatch.empty()
+        if self.window_s is not None:
+            wm = int(batch.ts.max() // self.window_s)
+            state.compact_filter = \
+                lambda keys, w=wm: (keys % (1 << 16)) >= max(0, w - 2)
+        left = batch.kind == self.left_kind
+        right = batch.kind == self.right_kind
+        out = []
+        for mask, mine, other in ((left, 0, 1), (right, 1, 0)):
+            if not mask.any():
+                continue
+            sub = batch.select(mask)
+            state.put_batch(self._skey(sub.key, sub.ts, mine), sub.value)
+            vals, found = state.get_batch(self._skey(sub.key, sub.ts, other))
+            if found.any():
+                joined = sub.select(found)
+                out.append(EventBatch(joined.key, vals[found], joined.ts,
+                                      joined.kind))
+        return EventBatch.concat(out) if out else EventBatch.empty()

@@ -1,0 +1,4 @@
+from repro.train.optimizer import (AdamWConfig, adamw_update, init_opt_state,
+                                   opt_state_specs)
+from repro.train.train_step import (make_loss_fn, make_prefill_step,
+                                    make_serve_step, make_train_step)

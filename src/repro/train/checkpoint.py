@@ -1,0 +1,112 @@
+"""Sharded, manifest-driven checkpointing (fault tolerance substrate).
+
+Layout:  <dir>/step_<N>/
+            manifest.json      — step, config hash, tree structure, shapes
+            shard_<i>.npz      — flattened leaves (split across files)
+            _COMMITTED         — written last; restore ignores uncommitted dirs
+
+Writes go to a temp dir + atomic rename, so a preemption mid-save never
+corrupts the latest checkpoint.  Restore reshapes/redistributes onto the
+current mesh (leaves are stored unsharded; device placement happens on the
+next step's in_shardings), which is what makes elastic restart onto a
+*different* device count work.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _tree_paths(tree) -> list[tuple[str, np.ndarray]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), np.asarray(leaf))
+            for path, leaf in flat]
+
+
+def config_hash(cfg) -> str:
+    return hashlib.sha256(repr(cfg).encode()).hexdigest()[:16]
+
+
+def save(ckpt_dir: str, step: int, tree, *, cfg=None,
+         shard_mb: int = 256, keep: int = 3) -> str:
+    """Atomic sharded save; prunes to the newest ``keep`` checkpoints."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves = _tree_paths(tree)
+    shards: list[dict[str, np.ndarray]] = [{}]
+    size = 0
+    limit = shard_mb * 1024 * 1024
+    index = {}
+    for name, arr in leaves:
+        if size + arr.nbytes > limit and shards[-1]:
+            shards.append({})
+            size = 0
+        shards[-1][name.replace("/", "_")] = arr
+        index[name] = {"shard": len(shards) - 1,
+                       "key": name.replace("/", "_"),
+                       "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        size += arr.nbytes
+    for i, shard in enumerate(shards):
+        np.savez(os.path.join(tmp, f"shard_{i}.npz"), **shard)
+    manifest = {"step": step, "n_shards": len(shards), "index": index,
+                "config_hash": config_hash(cfg) if cfg is not None else None}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+    # prune old checkpoints
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp")
+                   and os.path.exists(os.path.join(ckpt_dir, d, "_COMMITTED")))
+    for old in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, old))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(ckpt_dir, d, "_COMMITTED"))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, tree_like, *, step: int | None = None, cfg=None):
+    """Restore into the structure of ``tree_like``; verifies config hash."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    if cfg is not None and manifest["config_hash"] is not None \
+            and manifest["config_hash"] != config_hash(cfg):
+        raise ValueError("checkpoint/config mismatch: "
+                         f"{manifest['config_hash']} != {config_hash(cfg)}")
+    shards = [np.load(os.path.join(d, f"shard_{i}.npz"))
+              for i in range(manifest["n_shards"])]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        info = manifest["index"][name]
+        arr = shards[info["shard"]][info["key"]]
+        if list(arr.shape) != list(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {name}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out), step

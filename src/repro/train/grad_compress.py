@@ -1,0 +1,49 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for cross-pod gradient sync).
+
+Per-tensor symmetric int8 quantization; the quantization residual is carried
+in an error-feedback buffer so the compression bias vanishes over steps
+(Karimireddy et al., "Error Feedback Fixes SignSGD").  Used by the train step
+when ``compress_grads=True``: gradients are quantized *before* the cross-pod
+all-reduce (4x less ICI traffic on the pod axis) and dequantized after.
+
+On the dry-run mesh the quantize/dequantize pair brackets the psum so the
+lowered HLO carries int8 collective operands — visible in §Roofline's
+collective-bytes term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, error_buf):
+    """Returns (quantized tree, scales tree, new error buffer)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        return q, s, (g32 - deq).astype(e.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error_buf)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    qs = jax.tree.unflatten(treedef, [o[0] for o in out])
+    ss = jax.tree.unflatten(treedef, [o[1] for o in out])
+    es = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return qs, ss, es
+
+
+def init_error_buf(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)

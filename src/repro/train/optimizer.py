@@ -1,0 +1,72 @@
+"""Sharded AdamW with dtype-configurable states + optional compression hooks.
+
+Optimizer states mirror the parameter PartitionSpecs exactly (same tree), so
+m/v are FSDP+TP sharded wherever the weights are.  ``opt_dtype="bfloat16"``
+halves optimizer memory for the 400B config (documented in EXPERIMENTS.md
+§Dry-run memory analysis).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    opt_dtype: str = "float32"
+
+
+def init_opt_state(params, ocfg: AdamWConfig):
+    dt = jnp.dtype(ocfg.opt_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    return {"m": zeros,
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_specs(param_specs):
+    from jax.sharding import PartitionSpec as P
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt_state, ocfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, ocfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    dt = jnp.dtype(ocfg.opt_dtype)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * clip
+        m32 = ocfg.b1 * m.astype(jnp.float32) + (1 - ocfg.b1) * g32
+        v32 = ocfg.b2 * v.astype(jnp.float32) + (1 - ocfg.b2) * g32 * g32
+        mhat = m32 / (1 - ocfg.b1 ** step.astype(jnp.float32))
+        vhat = v32 / (1 - ocfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + ocfg.eps)
+        if p.ndim >= 2:                       # decay weights, not norms/bias
+            delta = delta + ocfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - ocfg.lr * delta).astype(p.dtype),
+                m32.astype(dt), v32.astype(dt))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm}

@@ -1,0 +1,75 @@
+"""The jitted train / prefill / serve steps for every architecture.
+
+``make_train_step`` closes over (cfg, mctx) and returns a function
+(params, opt_state, batch) -> (params, opt_state, metrics) suitable for
+``jax.jit`` with explicit in/out shardings — the object the multi-pod
+dry-run lowers and compiles.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.model import get_model
+from repro.models.sharding import MeshCtx
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def make_loss_fn(cfg: ArchConfig, mctx: MeshCtx):
+    model = get_model(cfg)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, cfg, mctx)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, mctx: MeshCtx,
+                    ocfg: AdamWConfig | None = None,
+                    microbatch: int = 1):
+    """Returns train_step(params, opt_state, batch)."""
+    ocfg = ocfg or AdamWConfig(opt_dtype=cfg.opt_dtype)
+    loss_fn = make_loss_fn(cfg, mctx)
+
+    def train_step(params, opt_state, batch):
+        if microbatch > 1:
+            def micro(i, acc):
+                mb = jax.tree.map(
+                    lambda x: x.reshape(microbatch, -1, *x.shape[1:])[i], batch)
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (acc[0] + l,
+                        jax.tree.map(lambda a, b: a + b, acc[1], g))
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            loss, grads = jax.lax.fori_loop(0, microbatch, micro, zero)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt, om = adamw_update(params, grads, opt_state, ocfg)
+        return new_params, new_opt, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, mctx: MeshCtx):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cfg, mctx)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, mctx: MeshCtx):
+    """One decode step: new token against the KV/state cache."""
+    model = get_model(cfg)
+
+    def serve_step(params, caches, tokens, t):
+        return model.decode(params, caches, tokens, t, cfg, mctx)
+
+    return serve_step

@@ -1,0 +1,75 @@
+"""End-to-end autoscaler behaviour: the paper's §5 claims as assertions."""
+import pytest
+
+from repro.core.controller import AutoScaler, ControllerConfig
+from repro.core.justin import JustinParams
+from repro.data.nexmark import QUERIES, TARGET_RATES
+from repro.streaming.engine import StreamEngine
+
+
+def run_policy(qname, policy, *, max_level=2, seed=3):
+    flow = QUERIES[qname]()
+    eng = StreamEngine(flow, seed=seed)
+    ctl = AutoScaler(eng, TARGET_RATES[qname], ControllerConfig(
+        policy=policy, justin=JustinParams(max_level=max_level)))
+    ctl.run()
+    return ctl.summary()
+
+
+@pytest.fixture(scope="module")
+def q11_results():
+    return {p: run_policy("q11", p) for p in ("ds2", "justin")}
+
+
+@pytest.fixture(scope="module")
+def q1_results():
+    return {p: run_policy("q1", p) for p in ("ds2", "justin")}
+
+
+def test_both_policies_reach_target_q11(q11_results):
+    for p, s in q11_results.items():
+        assert s["achieved_rate"] >= 0.97 * s["target"], (p, s)
+
+
+def test_justin_saves_cpu_on_stateful_query(q11_results):
+    """§5.1: significant CPU reduction on the complex stateful queries."""
+    d, j = q11_results["ds2"], q11_results["justin"]
+    assert j["cpu_cores"] < d["cpu_cores"]
+    assert 1 - j["cpu_cores"] / d["cpu_cores"] >= 0.25
+
+
+def test_justin_saves_memory_on_stateful_query(q11_results):
+    d, j = q11_results["ds2"], q11_results["justin"]
+    assert j["memory_mb"] < d["memory_mb"]
+
+
+def test_justin_uses_scale_up_on_q11(q11_results):
+    p, lvl = q11_results["justin"]["config"]["user_sessions"]
+    assert lvl >= 1                             # scaled up at least once
+    pd, _ = q11_results["ds2"]["config"]["user_sessions"]
+    assert p < pd                               # fewer tasks than DS2
+
+
+def test_stateless_query_strips_memory(q1_results):
+    """§5.1 q1: same parallelism, managed memory stripped (m = ⊥)."""
+    d, j = q1_results["ds2"], q1_results["justin"]
+    assert j["achieved_rate"] >= 0.97 * j["target"]
+    _, lvl = j["config"]["currency_map"]
+    assert lvl is None
+    assert j["memory_mb"] < d["memory_mb"]
+
+
+def test_q5_no_penalty():
+    """§5.1: a query that doesn't benefit must not be penalized."""
+    d = run_policy("q5", "ds2")
+    j = run_policy("q5", "justin")
+    assert j["achieved_rate"] >= 0.97 * j["target"]
+    assert j["cpu_cores"] <= d["cpu_cores"] + 1
+    assert j["memory_mb"] <= d["memory_mb"] * 1.1
+
+
+def test_reasonable_step_counts(q11_results):
+    """§5.1: same or slightly more steps; never runaway."""
+    d, j = q11_results["ds2"], q11_results["justin"]
+    assert j["steps"] <= d["steps"] + 2
+    assert j["steps"] <= 6

@@ -1,0 +1,124 @@
+"""Algorithm 1 unit + property tests (policy invariants)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.justin import (JustinParams, JustinState, OperatorDecision,
+                               commit, justin_policy)
+
+P = JustinParams()
+
+
+def mk_metrics(stateful=True, p=2, lvl=0, theta=0.5, tau=0.2, busy=0.9):
+    return {"op": {"stateful": stateful, "parallelism": p,
+                   "memory_level": lvl, "theta": theta, "tau_ms": tau,
+                   "busyness": busy, "rate_in": 1e4, "rate_out": 1e4,
+                   "selectivity": 1.0, "backlog": 10, "blocked": True,
+                   "busy_s": 1.0, "processed": 1000,
+                   "rate_processed": 1e4}}
+
+
+def test_stateless_gets_bottom():
+    """Lines 3-4: stateless operators lose their managed memory."""
+    m = mk_metrics(stateful=False)
+    out = justin_policy(None, m, {"op": 5}, JustinState(), P)
+    assert out["op"].memory_level is None
+    assert out["op"].parallelism == 5
+
+
+def test_pressure_cancels_scale_out():
+    """Lines 16-19: θ below Δθ => cancel DS2's scale-out, scale up."""
+    m = mk_metrics(theta=0.5)
+    out = justin_policy(None, m, {"op": 6}, JustinState(), P)
+    assert out["op"].parallelism == 2          # canceled
+    assert out["op"].memory_level == 1         # scaled up
+    assert out["op"].scaled_up
+
+
+def test_no_pressure_applies_ds2():
+    m = mk_metrics(theta=0.95, tau=0.1)
+    out = justin_policy(None, m, {"op": 6}, JustinState(), P)
+    assert out["op"].parallelism == 6
+    assert out["op"].memory_level == 0
+    assert not out["op"].scaled_up
+
+
+def test_tau_threshold_triggers_scale_up():
+    m = mk_metrics(theta=0.95, tau=2.0)        # latency over Δτ=1ms
+    out = justin_policy(None, m, {"op": 6}, JustinState(), P)
+    assert out["op"].parallelism == 2
+    assert out["op"].memory_level == 1
+
+
+def test_improvement_continues_scale_up():
+    """Lines 7-12: prior scale-up improved => scale up again."""
+    state = JustinState()
+    m0 = mk_metrics(theta=0.40)
+    c0 = {"op": OperatorDecision(2, 1, True)}
+    commit(state, c0, m0)
+    m1 = mk_metrics(theta=0.60, lvl=1)         # improved well over hysteresis
+    out = justin_policy(None, m1, {"op": 6}, state, P)
+    assert out["op"].parallelism == 2
+    assert out["op"].memory_level == 2
+    assert out["op"].scaled_up
+
+
+def test_no_improvement_rolls_back():
+    """Lines 13-14: prior scale-up did not improve => roll memory back and
+    let DS2's parallelism apply."""
+    state = JustinState()
+    m0 = mk_metrics(theta=0.50)
+    commit(state, {"op": OperatorDecision(2, 1, True)}, m0)
+    m1 = mk_metrics(theta=0.50, lvl=1)         # no improvement
+    out = justin_policy(None, m1, {"op": 6}, state, P)
+    assert out["op"].parallelism == 6
+    assert out["op"].memory_level == 0
+    assert not out["op"].scaled_up
+
+
+def test_max_level_caps_scale_up():
+    m = mk_metrics(theta=0.5, lvl=P.max_level - 1)
+    state = JustinState()
+    commit(state, {"op": OperatorDecision(2, P.max_level - 1, False)}, m)
+    out = justin_policy(None, m, {"op": 6}, state, P)
+    assert out["op"].parallelism == 6          # can't scale up: apply DS2
+    assert out["op"].memory_level == P.max_level - 1
+
+
+def test_capacity_sufficient_no_change():
+    """Line 6: operators DS2 does not rescale keep their configuration."""
+    m = mk_metrics(theta=0.1)                  # pressured but p unchanged
+    state = JustinState()
+    commit(state, {"op": OperatorDecision(2, 0, False)}, m)
+    out = justin_policy(None, m, {"op": 2}, state, P)
+    assert out["op"].parallelism == 2
+    assert out["op"].memory_level == 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(theta=st.one_of(st.none(), st.floats(0, 1)),
+       tau=st.one_of(st.none(), st.floats(0, 5)),
+       prev_theta=st.one_of(st.none(), st.floats(0, 1)),
+       prev_tau=st.one_of(st.none(), st.floats(0, 5)),
+       lvl=st.integers(0, 3), prev_up=st.booleans(),
+       ds2_p=st.integers(1, 64), p=st.integers(1, 64),
+       stateful=st.booleans())
+def test_property_policy_invariants(theta, tau, prev_theta, prev_tau, lvl,
+                                    prev_up, ds2_p, p, stateful):
+    """For ANY metric values: memory level stays within [0, maxLevel-1] or ⊥;
+    parallelism is DS2's or the previous one; vertical flag implies a level
+    increase; stateless ops always get ⊥."""
+    state = JustinState()
+    m_prev = mk_metrics(stateful, p, lvl, prev_theta, prev_tau)
+    commit(state, {"op": OperatorDecision(p, lvl, prev_up)}, m_prev)
+    m = mk_metrics(stateful, p, lvl, theta, tau)
+    out = justin_policy(None, m, {"op": ds2_p}, state, P)
+    d = out["op"]
+    if not stateful:
+        assert d.memory_level is None
+        assert d.parallelism == ds2_p
+        return
+    assert 0 <= d.memory_level < max(P.max_level, lvl + 1)
+    assert d.parallelism in (ds2_p, p)
+    if d.scaled_up:
+        assert d.memory_level == lvl + 1
+        assert d.parallelism == p              # scale-up cancels scale-out

@@ -1,0 +1,161 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+shape + finiteness assertions, decode-vs-prefill consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.tree_util import DictKey, tree_map_with_path
+
+from repro.configs import get_config, list_archs
+from repro.models import cpu_mesh_ctx, get_model
+from repro.models.transformer import VIT_STUB_DIM
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, b=2, s=64, key=1):
+    batch = {"tokens": jax.random.randint(jax.random.key(key), (b, s), 0,
+                                          cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["tokens"] = batch["tokens"][:, :s - cfg.img_tokens]
+        batch["img_emb"] = jax.random.normal(
+            jax.random.key(2), (b, cfg.img_tokens, VIT_STUB_DIM))
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.key(2), (b, cfg.enc_seq, VIT_STUB_DIM))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_loss(arch):
+    cfg = get_config(arch).reduced()
+    mctx = cpu_mesh_ctx()
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.key(0))
+    loss = model.loss(params, make_batch(cfg), cfg, mctx)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss)
+    assert 4.0 < float(loss) < 7.0              # ~ln(vocab) at init
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    """One optimizer step decreases nothing NaN and keeps shapes."""
+    cfg = get_config(arch).reduced()
+    mctx = cpu_mesh_ctx()
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.key(0))
+    opt = init_opt_state(params, AdamWConfig())
+    batch = make_batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: model.loss(p, batch, cfg, mctx))(params)
+    new_params, new_opt, metrics = adamw_update(params, grads, opt,
+                                                AdamWConfig())
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)):
+        assert a.shape == b.shape
+        assert jnp.all(jnp.isfinite(b))
+    assert jnp.isfinite(metrics["grad_norm"])
+    assert float(metrics["grad_norm"]) > 0
+
+
+def _pad_kv(caches):
+    def f(path, x):
+        keys = [p.key for p in path if isinstance(p, DictKey)]
+        if keys and keys[-1] in ("k", "v"):
+            pad = [(0, 0)] * x.ndim
+            pad[-2] = (0, 1)
+            return jnp.pad(x, pad)
+        return x
+    return tree_map_with_path(f, caches)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(arch):
+    """serve_step(token t) == prefill(tokens[:t+1]) last logits."""
+    cfg = get_config(arch).reduced()
+    mctx = cpu_mesh_ctx()
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.key(0))
+    b, s = 2, 48
+    toks = jax.random.randint(jax.random.key(1), (b, s + 1), 0,
+                              cfg.vocab_size)
+
+    def mk(t):
+        batch = {"tokens": t}
+        if cfg.family == "vlm":
+            batch["img_emb"] = jax.random.normal(
+                jax.random.key(2), (b, cfg.img_tokens, VIT_STUB_DIM))
+        if cfg.family == "encdec":
+            batch["frames"] = jax.random.normal(
+                jax.random.key(2), (b, cfg.enc_seq, VIT_STUB_DIM))
+        return batch
+
+    _, caches = model.prefill(params, mk(toks[:, :s]), cfg, mctx)
+    ref, _ = model.prefill(params, mk(toks[:, :s + 1]), cfg, mctx)
+    got, _ = model.decode(params, _pad_kv(caches), toks[:, s:s + 1],
+                          jnp.int32(s), cfg, mctx)
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    assert float(jnp.max(jnp.abs(got - ref))) / scale < 0.03
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mamba2-130m",
+                                  "recurrentgemma-2b"])
+def test_unrolled_matches_scan(arch):
+    """scan_layers=False (roofline path) computes the same function."""
+    cfg = get_config(arch).reduced()
+    mctx = cpu_mesh_ctx()
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.key(0))
+    batch = make_batch(cfg)
+    l1 = model.loss(params, batch, cfg, mctx)
+    cfg2 = cfg.replace(scan_layers=False)
+    l2 = get_model(cfg2).loss(params, batch, cfg2, mctx)
+    assert abs(float(l1) - float(l2)) < 2e-2
+
+
+def test_swa_limits_attention_window():
+    """A token beyond the window must not influence logits (SWA arch)."""
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    assert cfg.window == 32
+    mctx = cpu_mesh_ctx()
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (1, 64), 0, cfg.vocab_size)
+    logits1, _ = model.prefill(params, {"tokens": toks}, cfg, mctx)
+    toks2 = toks.at[:, 0].set((toks[:, 0] + 7) % cfg.vocab_size)
+    logits2, _ = model.prefill(params, {"tokens": toks2}, cfg, mctx)
+    # position 0 is 63 tokens away from the last one: outside window=32
+    np.testing.assert_allclose(np.asarray(logits1), np.asarray(logits2),
+                               atol=1e-4)
+
+
+def test_full_configs_match_assignment():
+    """The full (not reduced) configs carry the assigned dimensions."""
+    spec = {
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    }
+    for arch, (nl, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads,
+                cfg.num_kv_heads, cfg.d_ff, cfg.vocab_size) == \
+            (nl, d, h, kv, ff, v), arch
+
+
+def test_moe_param_count_llama4():
+    """llama4 config lands near 400B total / ~17B active."""
+    import numpy as np
+    from repro.models.model import abstract_params
+    cfg = get_config("llama4-maverick-400b-a17b")
+    shapes = abstract_params(cfg)
+    total = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+    assert 3.5e11 < total < 4.6e11, f"total params {total:.3e}"

@@ -1,0 +1,157 @@
+"""Streaming engine: operators, backpressure, reconfiguration, fault
+tolerance, straggler mitigation, DS2 model."""
+import numpy as np
+import pytest
+
+from repro.core.ds2 import ds2_parallelism, should_trigger
+from repro.core.placement import TMSpec, bin_pack, TaskRequest, \
+    placement_for_config
+from repro.data.nexmark import QUERIES, BidGen
+from repro.streaming.engine import StreamEngine, level_mb
+from repro.streaming.events import EventBatch, hash_partition
+from repro.streaming.graph import Dataflow
+from repro.streaming.operators import (FilterOp, KeyedStateOp, MapOp, SinkOp,
+                                       SourceOp)
+
+
+def simple_flow(op=None, p=1):
+    f = Dataflow("t")
+    mid = op or MapOp("mid", lambda b: b)
+    f.chain(SourceOp("source", BidGen(seed=1)), mid, SinkOp("sink"))
+    f.nodes[mid.name].parallelism = p
+    return f
+
+
+def test_events_flow_to_sink():
+    f = simple_flow()
+    eng = StreamEngine(f, seed=0)
+    eng.run(5, 10_000)
+    m = eng.collect()
+    assert m["sink"]["rate_in"] > 9_000
+
+
+def test_filter_selectivity():
+    f = Dataflow("t")
+    f.chain(SourceOp("source", BidGen(seed=1)),
+            FilterOp("f", lambda b: b.key % 2 == 0),
+            SinkOp("sink"))
+    eng = StreamEngine(f, seed=0)
+    eng.run(5, 10_000)
+    m = eng.collect()
+    assert 0.4 < m["f"]["selectivity"] < 0.6
+
+
+def test_backpressure_throttles_source():
+    op = KeyedStateOp("slow", "update", keyspace=500_000, prepopulate=False)
+    f = simple_flow(op)
+    eng = StreamEngine(f, seed=0, queue_cap_events=20_000)
+    eng.run(10, 500_000)                        # far beyond capacity
+    m = eng.collect()
+    assert m["source"]["rate_out"] < 500_000    # throttled
+    assert m["slow"]["busyness"] > 0.9
+
+
+def test_hash_partition_deterministic_and_balanced(rng):
+    keys = rng.integers(0, 1 << 40, 100_000).astype(np.int64)
+    p1 = hash_partition(keys, 8)
+    p2 = hash_partition(keys, 8)
+    np.testing.assert_array_equal(p1, p2)
+    counts = np.bincount(p1, minlength=8)
+    assert counts.min() > 0.8 * counts.max()
+
+
+def test_reconfigure_preserves_state_semantics():
+    """Scale-out re-partitions state: counts must continue, not reset."""
+    op = KeyedStateOp("agg", "update", keyspace=1_000, prepopulate=False)
+    f = simple_flow(op)
+    f.nodes["source"].op.users = 1_000          # narrow keyspace
+    eng = StreamEngine(f, seed=0)
+    eng.run(5, 5_000)
+    items_before = sum(len(t.state.items()[0]) for t in eng.tasks["agg"])
+    eng.reconfigure({"agg": (4, 1)})
+    items_after = sum(len(t.state.items()[0]) for t in eng.tasks["agg"])
+    assert items_after == items_before
+    assert len(eng.tasks["agg"]) == 4
+    eng.run(5, 5_000)                            # keeps processing
+    assert eng.collect()["sink"]["rate_in"] > 0
+
+
+def test_snapshot_restore_roundtrip():
+    op = KeyedStateOp("agg", "update", keyspace=1_000, prepopulate=False)
+    f = simple_flow(op)
+    eng = StreamEngine(f, seed=0)
+    eng.run(5, 5_000)
+    snap = eng.snapshot()
+    k0, v0 = eng.tasks["agg"][0].state.items()
+    eng.run(5, 5_000)                            # diverge
+    eng.restore(snap)
+    k1, v1 = eng.tasks["agg"][0].state.items()
+    np.testing.assert_array_equal(k0, k1)
+    np.testing.assert_array_equal(v0, v1)
+    assert eng.now == snap["now"]
+
+
+def test_kill_task_then_restore_recovers():
+    op = KeyedStateOp("agg", "update", keyspace=1_000, prepopulate=False)
+    f = simple_flow(op, p=2)
+    eng = StreamEngine(f, seed=0)
+    eng.run(5, 5_000)
+    snap = eng.snapshot()
+    eng.kill_task("agg", 0)                      # node failure
+    assert len(eng.tasks["agg"][0].state.items()[0]) == 0
+    eng.restore(snap)
+    total = sum(len(t.state.items()[0]) for t in eng.tasks["agg"])
+    assert total > 0
+
+
+def test_straggler_mitigation_rebalances():
+    f = simple_flow(MapOp("m", lambda b: b), p=4)
+    eng = StreamEngine(f, seed=0, queue_cap_events=10**9)
+    eng.set_straggler("m", 0, 50.0)              # 50x slowdown
+    eng.run(10, 200_000)
+    loads = [t.queued_events for t in eng.tasks["m"]]
+    # straggler's queue must not dominate: stolen work went to peers
+    assert max(loads) < 8 * (np.median(loads) + 2048)
+
+
+def test_ds2_scales_toward_target():
+    op = KeyedStateOp("agg", "update", keyspace=2_000, prepopulate=False)
+    f = simple_flow(op)
+    eng = StreamEngine(f, seed=0)
+    eng.run(12, 100_000)
+    metrics = eng.collect()
+    assert should_trigger(f, metrics, 100_000)
+    newp = ds2_parallelism(f, metrics, 100_000)
+    assert newp["agg"] > 1
+
+
+def test_bin_packing_spawns_tms():
+    reqs = [TaskRequest("op", i, 158.0) for i in range(9)]
+    pl = bin_pack(reqs, TMSpec(slots=4, managed_pool_mb=4 * 158))
+    assert pl.n_tms == 3                          # ceil(9/4)
+    assert pl.cpu_cores == 9
+
+
+def test_bin_packing_memory_constraint():
+    """A 632 MB task uses a whole lot of a TM's pool: packing respects it."""
+    reqs = [TaskRequest("op", i, 632.0) for i in range(4)]
+    pl = bin_pack(reqs, TMSpec(slots=4, managed_pool_mb=4 * 158 * 4))
+    assert pl.n_tms == 1                          # 4x632 = pool exactly
+    reqs = [TaskRequest("op", i, 632.0) for i in range(5)]
+    pl = bin_pack(reqs, TMSpec(slots=4, managed_pool_mb=4 * 158 * 4))
+    assert pl.n_tms == 2
+
+
+def test_level_mb():
+    assert level_mb(None) == 0.0
+    assert level_mb(0) == 158.0
+    assert level_mb(2) == 632.0
+
+
+@pytest.mark.parametrize("qname", list(QUERIES))
+def test_nexmark_queries_run(qname):
+    flow = QUERIES[qname]()
+    eng = StreamEngine(flow, seed=0, warm=qname in ("q1", "q2", "q3"))
+    eng.run(3, 20_000)
+    m = eng.collect()
+    assert m["source"]["rate_out"] > 0

@@ -1,0 +1,72 @@
+"""End-to-end behaviour tests for the paper's system: the full pipeline
+(generator -> engine -> metrics -> DS2 -> Justin -> placement -> engine)
+plus grad-compression and distribution plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.controller import AutoScaler, ControllerConfig
+from repro.core.justin import JustinParams
+from repro.data.nexmark import QUERIES, TARGET_RATES
+from repro.streaming.engine import StreamEngine
+from repro.train.grad_compress import (compress_with_feedback,
+                                       dequantize_int8, init_error_buf,
+                                       quantize_int8)
+
+
+def test_full_autoscale_cycle_q3():
+    """q3 converges for both policies and Justin never uses more CPU."""
+    out = {}
+    for policy in ("ds2", "justin"):
+        flow = QUERIES["q3"]()
+        eng = StreamEngine(flow, seed=5)
+        ctl = AutoScaler(eng, 120_000, ControllerConfig(
+            policy=policy, justin=JustinParams(max_level=2)))
+        ctl.run()
+        out[policy] = ctl.summary()
+        assert out[policy]["achieved_rate"] >= 0.97 * 120_000
+    assert out["justin"]["cpu_cores"] <= out["ds2"]["cpu_cores"]
+    assert out["justin"]["memory_mb"] < out["ds2"]["memory_mb"]
+
+
+def test_history_records_fig5_series():
+    flow = QUERIES["q11"]()
+    eng = StreamEngine(flow, seed=3)
+    ctl = AutoScaler(eng, TARGET_RATES["q11"],
+                     ControllerConfig(policy="justin"))
+    hist = ctl.run()
+    assert len(hist) >= 2
+    for row in hist:
+        assert row.cpu_cores > 0
+        assert row.memory_mb > 0
+        assert row.achieved_rate >= 0
+
+
+def test_quantize_roundtrip_bounded_error(rng):
+    x = jnp.asarray(rng.normal(size=(256, 64)) * 3, jnp.float32)
+    q, s = quantize_int8(x)
+    err = jnp.max(jnp.abs(dequantize_int8(q, s) - x))
+    assert float(err) <= float(s) * 1.01
+
+
+def test_error_feedback_reduces_bias(rng):
+    """Accumulated compressed-grad sum approaches the true sum."""
+    g = jnp.asarray(rng.normal(size=(128,)), jnp.float32) * 1e-3
+    grads = {"w": g}
+    err = init_error_buf({"w": g})
+    acc = jnp.zeros_like(g)
+    for _ in range(50):
+        qs, ss, err = compress_with_feedback(grads, err)
+        acc = acc + dequantize_int8(qs["w"], ss["w"])
+    rel = float(jnp.linalg.norm(acc - 50 * g) / jnp.linalg.norm(50 * g))
+    assert rel < 0.05
+
+
+def test_reduced_arch_matrix_one_step():
+    """Every assigned arch trains one step end-to-end via the driver."""
+    from repro.launch.train import train
+    from repro.configs import list_archs
+    for arch in list_archs():
+        r = train(arch, steps=1, verbose=False)
+        assert np.isfinite(r["final_loss"]), arch
