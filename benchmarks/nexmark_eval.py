@@ -22,19 +22,31 @@ from repro.streaming.engine import StreamEngine
 
 
 def evaluate(queries=None, *, max_level: int = 2, seed: int = 3,
-             verbose: bool = True) -> dict:
+             verbose: bool = True, profile: str | None = None,
+             windows: int = 8) -> dict:
+    """Justin vs DS2 per query.  ``profile=None`` reproduces the paper's
+    fixed-target protocol; a named profile ("ramp", "spike", "diurnal",
+    "sinusoid", "step") runs the same comparison under a dynamic workload
+    via the scenario subsystem."""
     queries = queries or list(QUERIES)
-    out: dict = {"max_level": max_level, "queries": {}}
+    out: dict = {"max_level": max_level, "profile": profile, "queries": {}}
     for qname in queries:
         row = {}
         for policy in ("ds2", "justin"):
             t0 = time.time()
-            flow = QUERIES[qname]()
-            eng = StreamEngine(flow, seed=seed)
-            ctl = AutoScaler(eng, TARGET_RATES[qname], ControllerConfig(
-                policy=policy, justin=JustinParams(max_level=max_level)))
-            hist = ctl.run()
-            s = ctl.summary()
+            if profile is not None:
+                from repro.scenarios import run_scenario
+                res = run_scenario(policy, qname, profile, windows=windows,
+                                   seed=seed, max_level=max_level)
+                hist = res.history
+                s = res.summary()
+            else:
+                flow = QUERIES[qname]()
+                eng = StreamEngine(flow, seed=seed)
+                ctl = AutoScaler(eng, TARGET_RATES[qname], ControllerConfig(
+                    policy=policy, justin=JustinParams(max_level=max_level)))
+                hist = ctl.run()
+                s = ctl.summary()
             s["wall_s"] = round(time.time() - t0, 1)
             s["history"] = [dataclasses.asdict(h) for h in hist]
             row[policy] = s
@@ -59,9 +71,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", nargs="*", default=None)
     ap.add_argument("--max-level", type=int, default=2)
+    ap.add_argument("--profile", default=None,
+                    choices=["constant", "ramp", "spike", "diurnal",
+                             "sinusoid", "step"],
+                    help="run under a dynamic rate profile instead of the "
+                         "paper's fixed target")
+    ap.add_argument("--windows", type=int, default=8)
     ap.add_argument("--out", default="benchmarks/nexmark_results.json")
     args = ap.parse_args()
-    res = evaluate(args.queries, max_level=args.max_level)
+    res = evaluate(args.queries, max_level=args.max_level,
+                   profile=args.profile, windows=args.windows)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=1, default=float)
     print(f"wrote {args.out}")

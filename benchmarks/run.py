@@ -41,6 +41,37 @@ def bench_fig5_nexmark() -> None:
              f"steps={row['steps_justin_vs_ds2']}")
 
 
+def bench_episode_autoscale() -> None:
+    """Single-episode autoscaling wall-clock — the engine fast-path
+    headline number (one full AutoScaler episode per policy, q11)."""
+    from repro.core.controller import AutoScaler, ControllerConfig
+    from repro.core.justin import JustinParams
+    from repro.data.nexmark import QUERIES, TARGET_RATES
+    from repro.streaming.engine import StreamEngine
+    for policy in ("ds2", "justin"):
+        t0 = time.time()
+        flow = QUERIES["q11"]()
+        eng = StreamEngine(flow, seed=3)
+        ctl = AutoScaler(eng, TARGET_RATES["q11"], ControllerConfig(
+            policy=policy, justin=JustinParams(max_level=2)))
+        ctl.run()
+        s = ctl.summary()
+        _row(f"episode_q11_{policy}", (time.time() - t0) * 1e6,
+             f"steps={s['steps']};rate={s['achieved_rate']:.0f};"
+             f"cpu={s['cpu_cores']};mem={s['memory_mb']:.0f}")
+
+
+def bench_scenarios() -> None:
+    """Dynamic-workload scenarios (ramp/spike) through the controller."""
+    from repro.scenarios import run_scenario
+    for prof in ("ramp", "spike"):
+        t0 = time.time()
+        r = run_scenario("justin", "q5", prof, windows=6)
+        _row(f"scenario_q5_{prof}", (time.time() - t0) * 1e6,
+             f"steps={r.steps};recovered={r.recovered()};"
+             f"cpu={r.final.cpu_cores}")
+
+
 def bench_justinserve() -> None:
     """Beyond-paper: hybrid LLM-serving elasticity."""
     from benchmarks.justinserve_bench import evaluate

@@ -40,6 +40,7 @@ class HistoryRow:
     memory_mb: float
     config: dict
     triggered: bool
+    target: float = 0.0               # the (possibly time-varying) target
 
 
 class AutoScaler:
@@ -81,10 +82,23 @@ class AutoScaler:
                                   exclude=set(self.flow.sources()))
         return pl.cpu_cores, pl.memory_mb
 
-    def run(self, *, max_windows: int | None = None) -> list[HistoryRow]:
-        """Run until converged (no trigger) or max_reconfigs spent."""
+    def run(self, *, max_windows: int | None = None,
+            target_profile=None, window_hook=None) -> list[HistoryRow]:
+        """Run until converged (no trigger) or max_reconfigs spent.
+
+        ``target_profile``: optional callable ``r(engine.now) -> events/s``
+        sampled at each window boundary (the scenario subsystem's rate
+        profiles).  With a profile the loop never declares convergence —
+        the workload may move again — so it runs all ``max_windows``.
+        ``window_hook``: optional callable ``(engine, window_idx)`` fired
+        before each window (fault injection point).
+        """
         windows = max_windows or (self.cfg.max_reconfigs + 4)
         for w in range(windows):
+            if target_profile is not None:
+                self.target = float(target_profile(self.engine.now))
+            if window_hook is not None:
+                window_hook(self.engine, w)
             self.engine.run(self._window_s(), self.target)
             metrics = self.engine.collect()
             src = sum(metrics[s]["rate_out"] for s in self.flow.sources())
@@ -95,10 +109,11 @@ class AutoScaler:
             self.history.append(HistoryRow(
                 t=self.engine.now, step=self.steps, achieved_rate=src,
                 cpu_cores=cpu, memory_mb=mem,
-                config=self.flow.config(), triggered=trig))
+                config=self.flow.config(), triggered=trig,
+                target=self.target))
             if not trig:
-                if w > 0:       # converged after at least one observation
-                    break
+                if w > 0 and target_profile is None:
+                    break       # converged after at least one observation
                 continue
             new_config = self.decide(metrics)
             if new_config != self.flow.config():

@@ -183,6 +183,11 @@ def q11() -> Dataflow:
 
 QUERIES = {"q1": q1, "q2": q2, "q3": q3, "q5": q5, "q8": q8, "q11": q11}
 
+# Queries whose working set exceeds one memory level (§5) — the cases where
+# Justin's scale-up beats DS2's scale-out; scenario tests and the benchmark
+# CLI use this to pick the memory-pressured workloads.
+MEMORY_PRESSURED = frozenset({"q8", "q11"})
+
 # Per-query target rates (events/s).  q1/q2 follow the paper's 2.25M scaled
 # by RATE_SCALE_STATELESS (see above); the stateful targets are chosen so the
 # final DS2 parallelism lands in the paper's reported range on this engine.

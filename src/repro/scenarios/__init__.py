@@ -1,0 +1,19 @@
+"""Scenario vocabulary for autoscaling experiments.
+
+Declarative rate profiles (constant, ramp, spike, diurnal, sinusoid, step),
+fault/straggler injection schedules, and a ``run_scenario`` driver that runs
+a policy against a Nexmark query under a time-varying workload and returns
+the controller history — the Daedalus/Phoebe-style dynamic evaluations the
+paper's fixed-rate protocol doesn't cover.
+"""
+from repro.scenarios.faults import (FaultSchedule, KillTask, SetStraggler,
+                                    parse_fault)
+from repro.scenarios.profiles import (Constant, Diurnal, Profile, Ramp,
+                                      Sinusoid, Spike, Step, make_profile)
+from repro.scenarios.runner import ScenarioResult, run_scenario
+
+__all__ = [
+    "Constant", "Diurnal", "Profile", "Ramp", "Sinusoid", "Spike", "Step",
+    "make_profile", "FaultSchedule", "KillTask", "SetStraggler",
+    "parse_fault", "ScenarioResult", "run_scenario",
+]

@@ -27,6 +27,16 @@ class EventBatch:
         return EventBatch(self.key[mask_or_idx], self.value[mask_or_idx],
                           self.ts[mask_or_idx], self.kind[mask_or_idx])
 
+    def slice(self, lo: int, hi: int) -> "EventBatch":
+        """Contiguous sub-batch as O(1) numpy views (no copy).  Safe because
+        operators never mutate batch arrays in place."""
+        return EventBatch(self.key[lo:hi], self.value[lo:hi],
+                          self.ts[lo:hi], self.kind[lo:hi])
+
+    def split(self, n: int) -> tuple["EventBatch", "EventBatch"]:
+        """(first n events, remainder) — both O(1) views."""
+        return self.slice(0, n), self.slice(n, len(self.key))
+
     @staticmethod
     def concat(batches: list["EventBatch"]) -> "EventBatch":
         batches = [b for b in batches if len(b)]

@@ -127,9 +127,7 @@ class KeyedStateOp(Operator):
         keys = np.arange(self.keyspace, dtype=np.int64)
         vals = rng.integers(0, 2**31 - 1, (self.keyspace, PAYLOAD_WORDS),
                             dtype=np.int64).astype(np.int32)
-        for off in range(0, self.keyspace, 1 << 16):
-            state.put_batch(keys[off:off + (1 << 16)],
-                            vals[off:off + (1 << 16)])
+        state.bulk_load(keys, vals)
         state.metrics.reset()
 
     def process(self, state: LSMStore, batch: EventBatch) -> EventBatch:
@@ -210,11 +208,8 @@ class SessionWindowOp(Operator):
         self.keyspace = keyspace
 
     def warm_state(self, state: LSMStore, rng: np.random.Generator) -> None:
-        keys = np.arange(self.keyspace, dtype=np.int64)
-        vals = np.zeros((self.keyspace, PAYLOAD_WORDS), np.int32)
-        for off in range(0, self.keyspace, 1 << 16):
-            state.put_batch(keys[off:off + (1 << 16)],
-                            vals[off:off + (1 << 16)])
+        state.bulk_load(np.arange(self.keyspace, dtype=np.int64),
+                        np.zeros((self.keyspace, PAYLOAD_WORDS), np.int32))
         state.metrics.reset()
 
     def process(self, state: LSMStore, batch: EventBatch) -> EventBatch:
@@ -253,6 +248,7 @@ class JoinOp(Operator):
         if not self.keyspace:
             return
         wids = (0, 1) if self.window_s is not None else (None,)
+        all_keys, all_vals = [], []
         for side in (0, 1):
             for wid in wids:
                 keys = np.arange(self.keyspace, dtype=np.int64) * 4 + side
@@ -261,9 +257,9 @@ class JoinOp(Operator):
                 vals = rng.integers(0, 2**31 - 1,
                                     (self.keyspace, PAYLOAD_WORDS),
                                     dtype=np.int64).astype(np.int32)
-                for off in range(0, self.keyspace, 1 << 17):
-                    state.put_batch(keys[off:off + (1 << 17)],
-                                    vals[off:off + (1 << 17)])
+                all_keys.append(keys)
+                all_vals.append(vals)
+        state.bulk_load(np.concatenate(all_keys), np.concatenate(all_vals))
         state.metrics.reset()
 
     def _skey(self, keys, ts, side: int) -> np.ndarray:

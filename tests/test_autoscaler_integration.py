@@ -59,6 +59,7 @@ def test_stateless_query_strips_memory(q1_results):
     assert j["memory_mb"] < d["memory_mb"]
 
 
+@pytest.mark.slow
 def test_q5_no_penalty():
     """§5.1: a query that doesn't benefit must not be penalized."""
     d = run_policy("q5", "ds2")

@@ -53,6 +53,7 @@ def test_uncommitted_checkpoint_ignored(tmp_path):
     assert ck.latest_step(str(tmp_path)) == 1
 
 
+@pytest.mark.slow
 def test_train_restart_after_failure(tmp_path):
     """Injected preemption: training restores and completes all steps."""
     r = train("llama3.2-3b", steps=12, ckpt_dir=str(tmp_path), ckpt_every=4,
@@ -61,6 +62,7 @@ def test_train_restart_after_failure(tmp_path):
     assert np.isfinite(r["final_loss"])
 
 
+@pytest.mark.slow
 def test_train_resume_continues_from_checkpoint(tmp_path):
     train("mamba2-130m", steps=8, ckpt_dir=str(tmp_path), ckpt_every=4,
           verbose=False)
@@ -70,6 +72,7 @@ def test_train_resume_continues_from_checkpoint(tmp_path):
     assert np.isfinite(r["final_loss"])
 
 
+@pytest.mark.slow
 def test_gradient_compression_training_converges():
     r_plain = train("llama3.2-3b", steps=10, verbose=False)
     r_comp = train("llama3.2-3b", steps=10, compress_grads=True,
@@ -78,6 +81,7 @@ def test_gradient_compression_training_converges():
     assert abs(r_comp["final_loss"] - r_plain["final_loss"]) < 0.2
 
 
+@pytest.mark.slow
 def test_microbatch_accumulation_matches(tmp_path):
     r1 = train("llama3.2-3b", steps=6, batch=4, microbatch=1, verbose=False)
     r2 = train("llama3.2-3b", steps=6, batch=4, microbatch=2, verbose=False)

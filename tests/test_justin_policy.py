@@ -1,5 +1,6 @@
 """Algorithm 1 unit + property tests (policy invariants)."""
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # optional [test] extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.justin import (JustinParams, JustinState, OperatorDecision,

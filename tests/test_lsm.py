@@ -1,6 +1,7 @@
 """LSM state backend: correctness vs a dict oracle + invariants."""
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # optional [test] extra
 from hypothesis import given, settings, strategies as st
 
 from repro.state.lsm import LSMStore, LatencyModel

@@ -11,6 +11,8 @@ from repro.models import cpu_mesh_ctx, get_model
 from repro.models.transformer import VIT_STUB_DIM
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
 
+pytestmark = pytest.mark.slow  # heavy jax compiles; run with -m slow
+
 ARCHS = list_archs()
 
 

@@ -1,0 +1,165 @@
+"""Scenario subsystem: profile shapes, fault schedules, and end-to-end
+controller behaviour under dynamic workloads (the Daedalus/Phoebe-style
+evaluations), including the paper's Fig. 5 memory headline in miniature.
+"""
+import numpy as np
+import pytest
+
+from repro.core.controller import ControllerConfig
+from repro.core.justin import JustinParams
+from repro.data.nexmark import MEMORY_PRESSURED
+from repro.scenarios import (Constant, Diurnal, FaultSchedule, KillTask,
+                             Ramp, SetStraggler, Sinusoid, Spike, Step,
+                             make_profile, parse_fault, run_scenario)
+from repro.streaming.engine import StreamEngine
+from repro.streaming.graph import Dataflow
+from repro.streaming.operators import MapOp, SinkOp, SourceOp
+from repro.data.nexmark import BidGen
+
+
+# ------------------------------------------------------------- profiles
+def test_profile_shapes():
+    assert Constant(100.0)(0) == 100.0 and Constant(100.0)(1e9) == 100.0
+
+    r = Ramp(start=10, end=110, duration_s=100, t0=50)
+    assert r(0) == 10 and r(50) == 10
+    assert r(100) == pytest.approx(60)
+    assert r(150) == 110 and r(1000) == 110
+
+    s = Spike(base=10, peak=90, t0=20, duration_s=10)
+    assert s(19.9) == 10 and s(20) == 90 and s(29.9) == 90 and s(30) == 10
+
+    d = Diurnal(low=10, high=110, period_s=100)
+    assert d(0) == pytest.approx(10)          # midnight trough
+    assert d(50) == pytest.approx(110)        # midday peak
+    assert d(100) == pytest.approx(10)
+
+    w = Sinusoid(mean=50, amplitude=20, period_s=40)
+    assert w(0) == pytest.approx(50)
+    assert w(10) == pytest.approx(70)
+    assert w(30) == pytest.approx(30)
+
+    st = Step(times=(0, 10, 20), rates=(5, 50, 25))
+    assert st(0) == 5 and st(9.9) == 5 and st(10) == 50 and st(25) == 25
+    with pytest.raises(ValueError):
+        Step(times=(10, 0), rates=(1, 2))
+
+    for name in ("constant", "ramp", "spike", "diurnal", "sinusoid", "step"):
+        p = make_profile(name, 1000.0, 100.0)
+        assert 0.0 <= p(0.0) <= 1000.0
+    with pytest.raises(ValueError):
+        make_profile("nope", 1.0, 1.0)
+
+
+def test_profiles_never_negative():
+    w = Sinusoid(mean=10, amplitude=100, period_s=40)
+    assert w(30) == 0.0                       # clamped
+
+
+# ---------------------------------------------------------------- faults
+def test_fault_schedule_fires_once_in_order():
+    f = Dataflow("t")
+    f.chain(SourceOp("source", BidGen(seed=1)),
+            MapOp("m", lambda b: b), SinkOp("sink"))
+    f.nodes["m"].parallelism = 2
+    eng = StreamEngine(f, seed=0)
+    sched = FaultSchedule([SetStraggler(5.0, "m", 0, 8.0, duration_s=10.0),
+                           KillTask(12.0, "m", 1)])
+    assert len(sched.pending) == 3            # straggler + recovery + kill
+    assert sched.apply_due(eng, 4.9) == []
+    fired = sched.apply_due(eng, 5.0)
+    assert len(fired) == 1
+    assert eng.tasks["m"][0].slowdown == 8.0
+    fired = sched.apply_due(eng, 20.0)        # recovery (t=15) + kill (t=12)
+    assert len(fired) == 2
+    assert eng.tasks["m"][0].slowdown == 1.0  # recovered
+    assert sched.apply_due(eng, 1e9) == []    # nothing left / no re-fire
+
+
+def test_parse_fault():
+    k = parse_fault("kill:30:window_join:2")
+    assert isinstance(k, KillTask) and k.t == 30 and k.idx == 2
+    s = parse_fault("straggle:10:op:0:20:5")
+    assert isinstance(s, SetStraggler) and s.factor == 20 and s.duration_s == 5
+    with pytest.raises(ValueError):
+        parse_fault("explode:1:op")
+
+
+# ----------------------------------------------------- end-to-end scenarios
+def quick_cfg(policy):
+    """Half-length decision windows: same controller logic, ~2x faster —
+    keeps the scenario suite inside the tier-1 budget."""
+    return ControllerConfig(policy=policy, decision_window_s=60.0,
+                            stabilization_s=30.0,
+                            justin=JustinParams(max_level=2))
+
+
+def test_ramp_scenario_reconfigures_and_recovers():
+    """Rising load forces at least one scale-out; the final window meets
+    its (moving) target."""
+    res = run_scenario("justin", "q5", "ramp", windows=6,
+                       cfg=quick_cfg("justin"))
+    assert res.steps >= 1
+    assert res.recovered()
+    # the enacted parallelism actually grew with the load
+    p0 = dict(res.history[0].config)["hot_auctions"][0]
+    p1 = dict(res.final.config)["hot_auctions"][0]
+    assert p1 > p0
+
+
+def test_spike_scenario_reconfigures_and_recovers():
+    res = run_scenario("ds2", "q5", "spike", windows=6,
+                       cfg=quick_cfg("ds2"))
+    assert res.steps >= 1
+    assert res.recovered()
+    # targets in the history reflect the spike shape (base != peak windows)
+    targets = {h.target for h in res.history}
+    assert len(targets) >= 2
+
+
+def test_scenario_with_straggler_still_recovers():
+    res = run_scenario(
+        "justin", "q5", "ramp", windows=6, cfg=quick_cfg("justin"),
+        faults=[SetStraggler(12.0, "hot_auctions", 0, 15.0,
+                             duration_s=12.0)])
+    assert len(res.faults_fired) == 2         # injection + recovery
+    assert res.recovered()
+
+
+def test_scenario_with_kill_task_keeps_flowing():
+    res = run_scenario("justin", "q5", "constant", windows=4,
+                       cfg=quick_cfg("justin"),
+                       faults=[KillTask(10.0, "hot_auctions", 0)])
+    assert len(res.faults_fired) == 1
+    assert res.final.achieved_rate > 0
+    assert res.recovered()
+
+
+def test_diurnal_scenario_tracks_load():
+    res = run_scenario("justin", "q5", "diurnal", windows=8,
+                       cfg=quick_cfg("justin"))
+    assert res.recovered()
+    assert len({round(h.target) for h in res.history}) >= 3
+
+
+@pytest.mark.slow
+def test_justin_memory_at_most_ds2_on_pressured_q8():
+    """Fig. 5's headline in miniature: on the memory-pressured q8 scenario
+    Justin converges with no more memory than DS2 (and fewer cores)."""
+    assert "q8" in MEMORY_PRESSURED
+    ds2 = run_scenario("ds2", "q8", "constant", windows=8)
+    justin = run_scenario("justin", "q8", "constant", windows=8)
+    assert ds2.recovered() and justin.recovered()
+    assert justin.final.memory_mb <= ds2.final.memory_mb
+    assert justin.final.cpu_cores <= ds2.final.cpu_cores
+
+
+def test_justin_memory_at_most_ds2_on_pressured_q11_ramp():
+    """Same comparison under a dynamic ramp on the other pressured query."""
+    assert "q11" in MEMORY_PRESSURED
+    ds2 = run_scenario("ds2", "q11", "ramp", windows=6,
+                       cfg=quick_cfg("ds2"))
+    justin = run_scenario("justin", "q11", "ramp", windows=6,
+                          cfg=quick_cfg("justin"))
+    assert ds2.recovered() and justin.recovered()
+    assert justin.final.memory_mb <= ds2.final.memory_mb

@@ -7,6 +7,8 @@ from repro.serve.engine import (BASE_HBM_BUDGET, JustinServeController,
                                 WorkloadSpec)
 from repro.serve.kv_cache import PagedKVCache, PageSpec
 
+pytestmark = pytest.mark.slow  # heavy jax compiles; run with -m slow
+
 
 def test_prefix_cache_hit_after_insert():
     c = PagedKVCache(64 * 2**21)

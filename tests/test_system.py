@@ -14,6 +14,8 @@ from repro.train.grad_compress import (compress_with_feedback,
                                        dequantize_int8, init_error_buf,
                                        quantize_int8)
 
+pytestmark = pytest.mark.slow  # heavy jax compiles; run with -m slow
+
 
 def test_full_autoscale_cycle_q3():
     """q3 converges for both policies and Justin never uses more CPU."""
