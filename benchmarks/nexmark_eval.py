@@ -7,6 +7,11 @@ the Fig. 5 curves) dumped to JSON.
 ``max_level=2`` reproduces the paper's observed trajectories (operators cap
 at one scale-up, final configs (p, 316 MB)); the Algorithm-1-literal
 ``max_level=3`` ablation is also recorded.  See EXPERIMENTS.md §Nexmark.
+
+``--grid`` switches to the policy × profile × query evaluation grid
+(``repro.scenarios.grid``): every combination's steps-to-converge,
+SLO-violation count, catch-up time and CPU/MB resource-time integrals,
+written as JSON and printed as a ds2-vs-justin markdown table.
 """
 from __future__ import annotations
 
@@ -77,10 +82,40 @@ def main() -> None:
                     help="run under a dynamic rate profile instead of the "
                          "paper's fixed target")
     ap.add_argument("--windows", type=int, default=8)
-    ap.add_argument("--out", default="benchmarks/nexmark_results.json")
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--grid", action="store_true",
+                    help="run the {ds2,justin} x {profiles} x {queries} "
+                         "evaluation grid (SLO violations, catch-up time, "
+                         "resource integrals) instead of the Fig. 5 episode")
+    ap.add_argument("--grid-profiles", nargs="*", default=None,
+                    choices=["constant", "ramp", "spike", "diurnal",
+                             "sinusoid", "step"],
+                    help="profile subset for --grid (default: all six)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: benchmarks/"
+                         "nexmark_results.json, or nexmark_grid.json with "
+                         "--grid — the two schemas differ)")
     args = ap.parse_args()
-    res = evaluate(args.queries, max_level=args.max_level,
-                   profile=args.profile, windows=args.windows)
+    if args.grid and args.profile is not None:
+        ap.error("--profile applies to the Fig. 5 episode; with --grid "
+                 "use --grid-profiles to restrict the profile set")
+    if args.grid_profiles is not None and not args.grid:
+        ap.error("--grid-profiles requires --grid")
+    if args.out is None:
+        args.out = "benchmarks/nexmark_grid.json" if args.grid \
+            else "benchmarks/nexmark_results.json"
+    if args.grid:
+        from repro.scenarios.grid import grid_markdown, run_grid
+        # default to the fast queries; pass --queries for the pressured ones
+        queries = args.queries or ["q1", "q5"]
+        res = run_grid(queries, args.grid_profiles,
+                       windows=args.windows, seed=args.seed,
+                       max_level=args.max_level)
+        print(grid_markdown(res))
+    else:
+        res = evaluate(args.queries, max_level=args.max_level,
+                       profile=args.profile, windows=args.windows,
+                       seed=args.seed)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=1, default=float)
     print(f"wrote {args.out}")

@@ -72,6 +72,26 @@ def bench_scenarios() -> None:
              f"cpu={r.final.cpu_cores}")
 
 
+def bench_colocation() -> None:
+    """Shared-cluster co-location: the neighbor a ds2 tenant blocks is
+    admitted when the tenant runs justin (see examples/colocation_demo.py)."""
+    from repro.core.controller import ControllerConfig
+    from repro.core.justin import JustinParams
+    from repro.scenarios import Cluster, ColocatedSpec, run_colocated
+    cfg = ControllerConfig(decision_window_s=60.0, stabilization_s=30.0,
+                           justin=JustinParams(max_level=2))
+    for a_policy in ("ds2", "justin"):
+        t0 = time.time()
+        res = run_colocated(
+            [ColocatedSpec(a_policy, "q1", name="A"),
+             ColocatedSpec("ds2", "q1", name="B")],
+            Cluster(cpu_slots=16, memory_mb=7000.0), windows=5, cfg=cfg)
+        b = res.tenant("B")
+        _row(f"colocate_A_{a_policy}", (time.time() - t0) * 1e6,
+             f"B_denied={len(b.denials)};B_recovered={b.slo().recovered};"
+             f"peak_mem={max(m for _, m in res.usage):.0f}")
+
+
 def bench_justinserve() -> None:
     """Beyond-paper: hybrid LLM-serving elasticity."""
     from benchmarks.justinserve_bench import evaluate

@@ -1,0 +1,65 @@
+"""Multi-query co-location demo: the paper's resource-efficiency headline
+as an observable event.
+
+Two copies of Nexmark q1 share one cluster whose memory budget holds both
+tenants only if the first one scales the Justin way.  Run A: both tenants
+DS2 — A's packaged allocation exhausts the budget and B's scale-up is
+denied window after window, leaving B below its target.  Run B: tenant A
+switches to Justin — same query, same target — and B's identical request
+is admitted, because Justin's stateless tasks hold no managed grant.
+
+    PYTHONPATH=src python examples/colocation_demo.py
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.controller import ControllerConfig
+from repro.core.justin import JustinParams
+from repro.scenarios import ADMISSION_POLICIES, Cluster, ColocatedSpec, \
+    run_colocated
+
+
+def show(res) -> None:
+    s = res.summary()
+    print(f"  cluster: {s['cluster']['cpu_slots']} slots, "
+          f"{s['cluster']['memory_mb']:,.0f} MB  "
+          f"(peak used: {s['peak_cpu']} slots, {s['peak_mem']:,.0f} MB)")
+    for name, t in s["tenants"].items():
+        slo = t["slo"]
+        print(f"  {name} ({t['policy']:6s} on {t['query']}): "
+              f"steps={t['steps']} denied_windows={t['denied_windows']} "
+              f"violations={slo['violations']} "
+              f"recovered={slo['recovered']} "
+              f"cpu_slot_windows={slo['cpu_slot_windows']} "
+              f"mb_windows={slo['mb_windows']:,.0f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--windows", type=int, default=5)
+    ap.add_argument("--cpu-slots", type=int, default=16)
+    ap.add_argument("--memory-mb", type=float, default=7000.0)
+    ap.add_argument("--admission", default="priority",
+                    choices=list(ADMISSION_POLICIES))
+    args = ap.parse_args()
+
+    cfg = ControllerConfig(decision_window_s=60.0, stabilization_s=30.0,
+                           justin=JustinParams(max_level=2))
+    for a_policy in ("ds2", "justin"):
+        print(f"\n=== tenant A runs {a_policy}; tenant B always ds2 ===")
+        cluster = Cluster(cpu_slots=args.cpu_slots,
+                          memory_mb=args.memory_mb)
+        res = run_colocated(
+            [ColocatedSpec(a_policy, "q1", name="A"),
+             ColocatedSpec("ds2", "q1", name="B")],
+            cluster, windows=args.windows, cfg=cfg,
+            admission=args.admission)
+        show(res)
+    print("\nDS2's one-size-fits-all grants exhaust the shared budget and "
+          "block the neighbor;\nJustin meets the same target while leaving "
+          "room for B's scale-up.")
+
+
+if __name__ == "__main__":
+    main()

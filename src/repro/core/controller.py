@@ -4,7 +4,18 @@ Runs the engine in decision windows; on a trigger computes DS2 (and, in
 "justin" mode, Algorithm 1 over it), enacts the new configuration via the
 engine (state re-partition / backend resize) and the bin-packing placement,
 then waits a stabilization period.  History rows capture what Fig. 5 plots:
-achieved rate, CPU cores, memory MB, per step.
+achieved rate, CPU cores, memory MB, per step — plus the per-window backlog
+and admission outcomes the SLO/cluster layers consume.
+
+Co-location support: an ``AutoScaler`` may be constructed with an
+``admission`` hook, consulted whenever a proposed reconfiguration would
+*grow* the episode's resource footprint (more CPU slots or more memory than
+the current placement).  A denied request leaves the configuration — and, in
+"justin" mode, the Algorithm-1 decision history — untouched, so the trigger
+persists and the same request is re-made at the next window boundary.
+Scale-downs (Justin giving memory back, DS2 scaling in) are never gated:
+they free shared-cluster capacity.  ``run`` with no hook is byte-identical
+to the single-tenant loop the golden traces pin.
 """
 from __future__ import annotations
 
@@ -41,11 +52,15 @@ class HistoryRow:
     config: dict
     triggered: bool
     target: float = 0.0               # the (possibly time-varying) target
+    backlog: int = 0                  # queued events across all tasks
+    denied: bool = False              # admission hook rejected this window's
+                                      # scale-up request (retried next window)
 
 
 class AutoScaler:
     def __init__(self, engine: StreamEngine, target_rate: float,
-                 cfg: ControllerConfig = ControllerConfig()):
+                 cfg: ControllerConfig = ControllerConfig(),
+                 *, admission=None):
         self.engine = engine
         self.flow = engine.flow
         self.target = target_rate
@@ -53,27 +68,50 @@ class AutoScaler:
         self.jstate = JustinState()
         self.history: list[HistoryRow] = []
         self.steps = 0
+        # optional ``admission(scaler, new_config, cpu, mem) -> bool``:
+        # consulted before enacting a configuration that grows the resource
+        # footprint (the cluster co-location arbitration point)
+        self.admission = admission
 
     # ------------------------------------------------------------------ core
     def _window_s(self) -> float:
         return self.cfg.decision_window_s * self.cfg.sim_time_scale
 
-    def decide(self, metrics: dict[str, dict]) -> dict[str, tuple[int, int | None]]:
+    def _propose(self, metrics: dict[str, dict]
+                 ) -> tuple[dict[str, tuple[int, int | None]],
+                            dict[str, OperatorDecision] | None]:
+        """Compute the policy's proposed C^t WITHOUT committing Justin's
+        decision history — commit must wait until the proposal is admitted
+        (a denied request never happened, as far as Algorithm 1 is
+        concerned)."""
         ds2_p = ds2_parallelism(self.flow, metrics, self.target,
                                 target_busyness=self.cfg.target_busyness,
                                 max_parallelism=self.cfg.max_parallelism)
         if self.cfg.policy == "ds2":
             # DS2 couples memory to slots: every task keeps the base grant
-            return {op: (p, 0 if metrics[op]["stateful"] else 0)
-                    for op, p in ds2_p.items()}
+            # whether stateful or not (the engine maps stateless ops to ⊥)
+            return {op: (p, 0) for op, p in ds2_p.items()}, None
         decisions = justin_policy(self.flow, metrics, ds2_p, self.jstate,
                                   self.cfg.justin)
-        commit(self.jstate, decisions, metrics)
         return {op: (d.parallelism, d.memory_level)
-                for op, d in decisions.items()}
+                for op, d in decisions.items()}, decisions
 
-    def resources(self) -> tuple[int, float]:
-        config = self.flow.config()
+    def decide(self, metrics: dict[str, dict]) -> dict[str, tuple[int, int | None]]:
+        """Propose-and-commit in one call — the single-tenant convenience.
+        NOT admission-aware: it commits Justin's decision history
+        unconditionally, so co-located drivers must go through
+        ``step_window`` (which defers the commit until the proposal is
+        admitted)."""
+        config, decisions = self._propose(metrics)
+        if decisions is not None:
+            commit(self.jstate, decisions, metrics)
+        return config
+
+    def resources(self, config: dict | None = None) -> tuple[int, float]:
+        """(CPU slots, memory MB) the placement needs for ``config`` —
+        the *current* flow configuration when not given, or a proposed C^t
+        (the admission hook's pre-enactment quote)."""
+        config = config if config is not None else self.flow.config()
         if self.cfg.policy == "ds2":
             # one-size-fits-all: every slot keeps the base managed grant
             # whether its task uses it or not (Takeaway 1)
@@ -81,6 +119,52 @@ class AutoScaler:
         pl = placement_for_config(config, base_mem_mb=self.cfg.base_mem_mb,
                                   exclude=set(self.flow.sources()))
         return pl.cpu_cores, pl.memory_mb
+
+    def step_window(self, w: int = 0, *, target_profile=None,
+                    window_hook=None) -> bool:
+        """Run ONE decision window: observe, maybe trigger, maybe
+        reconfigure.  Returns True when the window saw no trigger (the
+        single-tenant loop's convergence signal).  The co-location driver
+        calls this directly to interleave N episodes in lockstep."""
+        if target_profile is not None:
+            self.target = float(target_profile(self.engine.now))
+        if window_hook is not None:
+            window_hook(self.engine, w)
+        self.engine.run(self._window_s(), self.target)
+        metrics = self.engine.collect()
+        src = sum(metrics[s]["rate_out"] for s in self.flow.sources())
+        trig = (self.steps < self.cfg.max_reconfigs
+                and should_trigger(self.flow, metrics, self.target,
+                                   busy_high=self.cfg.busy_high))
+        cpu, mem = self.resources()
+        row = HistoryRow(
+            t=self.engine.now, step=self.steps, achieved_rate=src,
+            cpu_cores=cpu, memory_mb=mem,
+            config=self.flow.config(), triggered=trig,
+            target=self.target,
+            backlog=sum(m["backlog"] for m in metrics.values()))
+        self.history.append(row)
+        if not trig:
+            return True
+        new_config, decisions = self._propose(metrics)
+        if new_config != self.flow.config():
+            cpu_new, mem_new = self.resources(new_config)
+            grows = cpu_new > cpu or mem_new > mem
+            if grows and self.admission is not None \
+                    and not self.admission(self, new_config,
+                                           cpu_new, mem_new):
+                row.denied = True
+                return False        # retry at the next window boundary
+        if decisions is not None:
+            commit(self.jstate, decisions, metrics)
+        if new_config != self.flow.config():
+            self.steps += 1
+            self.engine.reconfigure(new_config)
+            # stabilization: run and discard one short window
+            self.engine.run(self.cfg.stabilization_s
+                            * self.cfg.sim_time_scale, self.target)
+            self.engine.collect()
+        return False
 
     def run(self, *, max_windows: int | None = None,
             target_profile=None, window_hook=None) -> list[HistoryRow]:
@@ -95,34 +179,10 @@ class AutoScaler:
         """
         windows = max_windows or (self.cfg.max_reconfigs + 4)
         for w in range(windows):
-            if target_profile is not None:
-                self.target = float(target_profile(self.engine.now))
-            if window_hook is not None:
-                window_hook(self.engine, w)
-            self.engine.run(self._window_s(), self.target)
-            metrics = self.engine.collect()
-            src = sum(metrics[s]["rate_out"] for s in self.flow.sources())
-            trig = (self.steps < self.cfg.max_reconfigs
-                    and should_trigger(self.flow, metrics, self.target,
-                                       busy_high=self.cfg.busy_high))
-            cpu, mem = self.resources()
-            self.history.append(HistoryRow(
-                t=self.engine.now, step=self.steps, achieved_rate=src,
-                cpu_cores=cpu, memory_mb=mem,
-                config=self.flow.config(), triggered=trig,
-                target=self.target))
-            if not trig:
-                if w > 0 and target_profile is None:
-                    break       # converged after at least one observation
-                continue
-            new_config = self.decide(metrics)
-            if new_config != self.flow.config():
-                self.steps += 1
-                self.engine.reconfigure(new_config)
-                # stabilization: run and discard one short window
-                self.engine.run(self.cfg.stabilization_s
-                                * self.cfg.sim_time_scale, self.target)
-                self.engine.collect()
+            quiet = self.step_window(w, target_profile=target_profile,
+                                     window_hook=window_hook)
+            if quiet and w > 0 and target_profile is None:
+                break       # converged after at least one observation
         return self.history
 
     # ------------------------------------------------------------- reporting

@@ -8,6 +8,31 @@ using observed selectivities; the new parallelism is
     p_i = ceil( true_input_rate_i(target) / true_rate_per_task_i )
 
 optionally headroom-scaled so the resulting busyness sits below a target.
+
+Symbol map (paper §2.2/§4 → code):
+
+=================  ======================================================
+paper              here
+=================  ======================================================
+busyness           ``metrics[op]["busyness"]`` — fraction of task time
+                   spent processing (the engine's per-window measurement
+                   of Flink's "busy time"); DS2's only scaling signal,
+                   which is why it over-provisions memory-pressured
+                   operators (§4: capacity estimates made under pressure
+                   are too low, forcing several reconfiguration steps)
+true rate/task     ``true_rate_per_task`` = processed / busy_s, events/s
+                   one task sustains at 100% busyness
+selectivity        ``metrics[op]["selectivity"]`` = out/in events over
+                   the window, used to propagate the target through the
+                   dataflow topologically
+p_i                ``ds2_parallelism`` result — the CPU half of C^t; in
+                   "ds2" mode every slot also keeps the uniform base
+                   managed-memory grant (the one-size-fits-all package
+                   Takeaway 1 criticizes; see ``AutoScaler.resources``)
+trigger            ``should_trigger`` — unmodified DS2: source rate below
+                   target, or any operator busy above ``busy_high`` with
+                   a backlog (backpressure)
+=================  ======================================================
 """
 from __future__ import annotations
 

@@ -8,6 +8,34 @@ Per stateful operator o_i with a DS2 rescale proposal:
   * else: memory pressure (θ < Δθ or τ > Δτ) and headroom?  cancel the
     scale-out, scale up instead.
 Stateless operators get m = ⊥ (no managed memory) — Takeaway 1.
+
+Symbol map (paper → code):
+
+=============  ==========================================================
+paper          here
+=============  ==========================================================
+θ (theta)      effective in-memory hit rate of an operator's state reads
+               (fraction that never probed an on-"disk" LSM level);
+               computed per window in ``StreamEngine.collect`` from the
+               LSM counters, read by the policy as ``metrics[op]["theta"]``
+               — the §4.2 storage-performance signal
+τ (tau)        mean state-access latency in ms over the window
+               (``metrics[op]["tau_ms"]``), θ's companion signal
+Δθ, Δτ         pressure thresholds (``JustinParams.delta_theta`` /
+               ``delta_tau_ms``): θ below Δθ or τ above Δτ ⇒ the operator
+               is memory-pressured (Algorithm 1 line 16)
+m, maxLevel    the memory-level ladder: level ℓ grants base·2^ℓ MB of
+               managed memory per task (``engine.level_mb``; base 158 MB,
+               §5 testbed), capped at ``JustinParams.max_level``; ⊥
+               (``None``) = no managed memory for stateless operators
+v^t            ``OperatorDecision.scaled_up`` — "this window's decision
+               was a memory scale-up", consulted at t+1 (line 7)
+C^t            the per-operator ``(parallelism, memory_level)`` map the
+               controller enacts (``AutoScaler._propose``)
+footnote 3     ``JustinParams.hysteresis``: a scale-up must improve θ/τ
+               by this relative margin to count (line 8), else line 14
+               rolls the level back
+=============  ==========================================================
 """
 from __future__ import annotations
 

@@ -5,9 +5,28 @@ fault/straggler injection schedules, and a ``run_scenario`` driver that runs
 a policy against a Nexmark query under a time-varying workload and returns
 the controller history — the Daedalus/Phoebe-style dynamic evaluations the
 paper's fixed-rate protocol doesn't cover.
+
+On top of the single-episode driver sit three layers (see
+docs/architecture.md):
+
+* ``metrics`` — SLO scorecards over controller histories (violation
+  windows, catch-up time, p95 backlog, resource-time integrals);
+* ``cluster`` — a shared finite ``Cluster`` budget plus ``run_colocated``,
+  stepping N (policy, query, profile) episodes in lockstep with per-window
+  admission arbitration (priority / fair_share / first_come);
+* ``grid`` — the {policy} × {profile} × {query} evaluation grid behind
+  ``benchmarks/nexmark_eval.py --grid``.
 """
+from repro.scenarios.cluster import (ADMISSION_POLICIES, Cluster,
+                                     ColocatedResult, ColocatedSpec,
+                                     TenantRun, run_colocated)
 from repro.scenarios.faults import (FaultSchedule, KillTask, SetStraggler,
                                     parse_fault)
+from repro.scenarios.grid import (comparison_rows, grid_markdown, run_grid)
+from repro.scenarios.metrics import (CatchUp, SLOReport, catch_up_episodes,
+                                     catch_up_time_s, p95_backlog,
+                                     resource_integrals, slo_report,
+                                     violation_windows)
 from repro.scenarios.profiles import (Constant, Diurnal, Profile, Ramp,
                                       Sinusoid, Spike, Step, make_profile)
 from repro.scenarios.runner import ScenarioResult, run_scenario
@@ -16,4 +35,9 @@ __all__ = [
     "Constant", "Diurnal", "Profile", "Ramp", "Sinusoid", "Spike", "Step",
     "make_profile", "FaultSchedule", "KillTask", "SetStraggler",
     "parse_fault", "ScenarioResult", "run_scenario",
+    "CatchUp", "SLOReport", "catch_up_episodes", "catch_up_time_s",
+    "p95_backlog", "resource_integrals", "slo_report", "violation_windows",
+    "ADMISSION_POLICIES", "Cluster", "ColocatedResult", "ColocatedSpec",
+    "TenantRun", "run_colocated",
+    "comparison_rows", "grid_markdown", "run_grid",
 ]

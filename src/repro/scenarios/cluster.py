@@ -1,0 +1,262 @@
+"""Multi-query co-location on one shared, finite cluster.
+
+The paper's headline — hybrid CPU/memory scaling supports a target rate
+with *fewer total cluster resources* than CPU-only DS2 — is invisible when
+every episode owns an unbounded cluster.  This module makes it measurable:
+
+* :class:`Cluster` is a shared budget of CPU slots and memory MB with
+  per-tenant accounting.  ``reserve`` is atomic (admit or deny, never
+  overdraw) and an invariant check keeps total usage within budget.
+* :func:`run_colocated` steps N ``(policy, query, profile)`` episodes in
+  lockstep, one decision window at a time.  Each episode's scale-up request
+  hits the cluster through the controller's admission hook; denied requests
+  leave the episode's configuration untouched, so its trigger persists and
+  the request is retried at the next window.  Scale-downs bypass admission
+  and *release* capacity — which is precisely how Justin's give-back-memory
+  decisions free room for a neighbor's scale-out that DS2's one-size-fits-
+  all packages would keep blocked.
+
+Admission arbitration (who gets first claim on the remaining budget each
+window) supports three orders:
+
+* ``"priority"``   — the spec list is the priority order, every window;
+* ``"fair_share"`` — episodes using the smallest fraction of the budget go
+  first (max of CPU share and memory share, ascending);
+* ``"first_come"`` — episodes with the oldest unserved (denied) request go
+  first; ties fall back to spec order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+from repro.core.controller import AutoScaler, ControllerConfig
+from repro.core.justin import JustinParams
+from repro.data.nexmark import QUERIES, TARGET_RATES
+from repro.scenarios.faults import FaultSchedule
+from repro.scenarios.metrics import SLOReport, slo_report
+from repro.scenarios.profiles import Profile, make_profile
+from repro.scenarios.runner import scenario_horizon_s
+from repro.streaming.engine import StreamEngine
+
+ADMISSION_POLICIES = ("priority", "fair_share", "first_come")
+
+
+@dataclass
+class Cluster:
+    """A finite pool of CPU slots and memory, shared by named tenants.
+
+    Usage is tracked per tenant as the *absolute* footprint of that
+    tenant's current placement (not deltas), so a reservation is simply
+    "replace my footprint with this one" — admitted iff the cluster-wide
+    totals stay within budget.
+    """
+    cpu_slots: int
+    memory_mb: float
+    used_cpu: dict[str, int] = field(default_factory=dict)
+    used_mem: dict[str, float] = field(default_factory=dict)
+
+    # ------------------------------------------------------------- accounting
+    @property
+    def cpu_in_use(self) -> int:
+        return sum(self.used_cpu.values())
+
+    @property
+    def mem_in_use(self) -> float:
+        return sum(self.used_mem.values())
+
+    def available(self) -> tuple[int, float]:
+        return (self.cpu_slots - self.cpu_in_use,
+                self.memory_mb - self.mem_in_use)
+
+    def fits(self, tenant: str, cpu: int, mem: float) -> bool:
+        """Would replacing ``tenant``'s footprint with (cpu, mem) fit?"""
+        cpu_total = self.cpu_in_use - self.used_cpu.get(tenant, 0) + cpu
+        mem_total = self.mem_in_use - self.used_mem.get(tenant, 0.0) + mem
+        return cpu_total <= self.cpu_slots and mem_total <= self.memory_mb
+
+    def reserve(self, tenant: str, cpu: int, mem: float) -> bool:
+        """Atomically replace ``tenant``'s footprint; False if it would
+        overdraw the budget (nothing changes on denial)."""
+        if not self.fits(tenant, cpu, mem):
+            return False
+        self.used_cpu[tenant] = cpu
+        self.used_mem[tenant] = mem
+        assert self.cpu_in_use <= self.cpu_slots \
+            and self.mem_in_use <= self.memory_mb + 1e-9, "budget overdrawn"
+        return True
+
+    def release(self, tenant: str) -> None:
+        self.used_cpu.pop(tenant, None)
+        self.used_mem.pop(tenant, None)
+
+    def share(self, tenant: str) -> float:
+        """Tenant's budget share: max of its CPU and memory fractions —
+        the fair-share arbitration key."""
+        return max(self.used_cpu.get(tenant, 0) / max(self.cpu_slots, 1),
+                   self.used_mem.get(tenant, 0.0) / max(self.memory_mb, 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# Co-located episodes
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ColocatedSpec:
+    """One tenant: a policy driving a query under a rate profile.  ``name``
+    defaults to ``{policy}:{query}`` (suffixed for uniqueness by the
+    driver).  ``profile`` may be a Profile, a named shape ("ramp", ...) or
+    None for the paper's fixed-target protocol; ``target`` overrides the
+    query's default target rate."""
+    policy: str
+    query: str
+    profile: Profile | str | None = None
+    name: str | None = None
+    target: float | None = None
+    faults: FaultSchedule | list | None = None
+
+
+@dataclass
+class TenantRun:
+    """One tenant's episode state + outcome."""
+    spec: ColocatedSpec
+    name: str
+    scaler: AutoScaler
+    profile: Profile | None
+    faults: FaultSchedule | None
+    denials: list[int] = field(default_factory=list)   # window indices
+    faults_fired: list = field(default_factory=list)
+    first_pending: int | None = None   # window of oldest unserved request
+
+    @property
+    def history(self) -> list:
+        return self.scaler.history
+
+    def slo(self, slack: float = 0.97) -> SLOReport:
+        return slo_report(self.history, slack)
+
+
+@dataclass
+class ColocatedResult:
+    cluster: Cluster
+    tenants: list[TenantRun]
+    admission: str
+    # per-window cluster totals [(cpu_in_use, mem_in_use), ...]
+    usage: list = field(default_factory=list)
+
+    def tenant(self, name: str) -> TenantRun:
+        for t in self.tenants:
+            if t.name == name:
+                return t
+        raise KeyError(name)
+
+    def summary(self, slack: float = 0.97) -> dict:
+        return {
+            "admission": self.admission,
+            "cluster": {"cpu_slots": self.cluster.cpu_slots,
+                        "memory_mb": self.cluster.memory_mb},
+            "peak_cpu": max((c for c, _ in self.usage), default=0),
+            "peak_mem": max((m for _, m in self.usage), default=0.0),
+            "tenants": {t.name: {
+                "policy": t.spec.policy, "query": t.spec.query,
+                "steps": t.scaler.steps,
+                "denied_windows": list(t.denials),
+                "slo": t.slo(slack).to_dict(),
+            } for t in self.tenants},
+        }
+
+
+def _arbitration_order(tenants: list[TenantRun], cluster: Cluster,
+                       admission: str) -> list[TenantRun]:
+    if admission == "priority":
+        return list(tenants)
+    if admission == "fair_share":
+        return sorted(tenants, key=lambda t: cluster.share(t.name))
+    if admission == "first_come":
+        return sorted(tenants, key=lambda t: (t.first_pending is None,
+                                              t.first_pending or 0))
+    raise ValueError(f"unknown admission policy {admission!r} "
+                     f"(have: {', '.join(ADMISSION_POLICIES)})")
+
+
+def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
+                  *, windows: int = 8, seed: int = 3, max_level: int = 2,
+                  admission: str = "priority",
+                  cfg: ControllerConfig | None = None,
+                  warm: bool = True) -> ColocatedResult:
+    """Step every episode through ``windows`` decision windows in lockstep,
+    arbitrating each window's scale-up requests against ``cluster``'s
+    remaining budget.
+
+    ``specs`` entries may be :class:`ColocatedSpec` or bare
+    ``(policy, query)`` / ``(policy, query, profile)`` tuples.  ``cfg`` is a
+    *template*: its per-policy variant is derived per tenant (the ``policy``
+    field is overridden from the spec).  Episodes whose *initial* placement
+    already exceeds the budget raise — a cluster that cannot hold the
+    starting configurations is a sizing error, not an admission decision.
+    """
+    specs = [s if isinstance(s, ColocatedSpec) else ColocatedSpec(*s)
+             for s in specs]
+    base = cfg or ControllerConfig(justin=JustinParams(max_level=max_level))
+    tenants: list[TenantRun] = []
+    names: set[str] = set()
+    for i, spec in enumerate(specs):
+        name = spec.name or f"{spec.policy}:{spec.query}"
+        while name in names:
+            name = f"{name}#{i}"
+        names.add(name)
+        tcfg = dataclasses.replace(base, policy=spec.policy)
+        target = spec.target if spec.target is not None \
+            else TARGET_RATES[spec.query]
+        profile = spec.profile
+        if isinstance(profile, str):
+            profile = make_profile(profile, target,
+                                   scenario_horizon_s(tcfg, windows))
+        faults = spec.faults
+        if isinstance(faults, (list, tuple)):
+            faults = FaultSchedule(list(faults))
+        engine = StreamEngine(QUERIES[spec.query](), seed=seed, warm=warm)
+        scaler = AutoScaler(engine, profile(0.0) if profile else target,
+                            tcfg)
+        tenants.append(TenantRun(spec=spec, name=name, scaler=scaler,
+                                 profile=profile, faults=faults))
+
+    # initial placements must fit — this is cluster sizing, not admission
+    for t in tenants:
+        cpu0, mem0 = t.scaler.resources()
+        if not cluster.reserve(t.name, cpu0, mem0):
+            raise ValueError(
+                f"cluster {cluster.cpu_slots} slots/{cluster.memory_mb} MB "
+                f"cannot hold {t.name}'s initial placement "
+                f"({cpu0} slots, {mem0} MB)")
+
+    result = ColocatedResult(cluster=cluster, tenants=tenants,
+                             admission=admission)
+
+    for w in range(windows):
+        for t in _arbitration_order(tenants, cluster, admission):
+            def admit(scaler, new_config, cpu, mem, _t=t):
+                ok = cluster.reserve(_t.name, cpu, mem)
+                if not ok:
+                    _t.denials.append(w)
+                    if _t.first_pending is None:
+                        _t.first_pending = w
+                return ok
+
+            def hook(eng, _w, _t=t):
+                if _t.faults is not None:
+                    _t.faults_fired.extend(
+                        _t.faults.apply_due(eng, eng.now))
+
+            t.scaler.admission = admit
+            t.scaler.step_window(w, target_profile=t.profile,
+                                 window_hook=hook)
+            # sync the enacted footprint (scale-downs release capacity;
+            # admitted scale-ups were already reserved at the quoted size,
+            # re-reserving the enacted placement keeps them in lockstep)
+            cpu_now, mem_now = t.scaler.resources()
+            cluster.reserve(t.name, cpu_now, mem_now)
+            if not t.history[-1].denied:
+                t.first_pending = None
+        result.usage.append((cluster.cpu_in_use, cluster.mem_in_use))
+    return result

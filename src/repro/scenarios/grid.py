@@ -1,0 +1,113 @@
+"""Policy × profile × query evaluation grid.
+
+Runs {ds2, justin} × {rate profiles} × {queries} through ``run_scenario``
+and reduces each episode to its SLO scorecard (``scenarios.metrics``),
+then lays the results out as ds2-vs-justin comparison rows: steps to
+converge, SLO-violation count, worst catch-up time, and the CPU/memory
+resource-time integrals — the axes Daedalus/Phoebe-style evaluations
+compare autoscalers on, and the ones the paper's "fewer total cluster
+resources" claim lives on.
+
+``benchmarks/nexmark_eval.py --grid`` is the CLI front end; the JSON it
+writes feeds plots, and :func:`grid_markdown` renders the same data as a
+README-ready table.
+"""
+from __future__ import annotations
+
+from repro.data.nexmark import QUERIES
+from repro.scenarios.metrics import DEFAULT_SLACK, slo_report
+from repro.scenarios.runner import run_scenario
+
+POLICIES = ("ds2", "justin")
+PROFILES = ("constant", "ramp", "spike", "diurnal", "sinusoid", "step")
+
+
+def run_grid(queries=None, profiles=None, policies=POLICIES, *,
+             windows: int = 8, seed: int = 3, max_level: int = 2,
+             slack: float = DEFAULT_SLACK, verbose: bool = True) -> dict:
+    """Run the full grid; returns ``{"cells": [...], "meta": {...}}`` where
+    each cell is one (policy, query, profile) episode's summary + SLO
+    scorecard."""
+    queries = list(queries or QUERIES)
+    profiles = list(profiles or PROFILES)
+    cells = []
+    for qname in queries:
+        for prof in profiles:
+            for policy in policies:
+                res = run_scenario(policy, qname, prof, windows=windows,
+                                   seed=seed, max_level=max_level)
+                rep = slo_report(res.history, slack)
+                cell = {"policy": policy, "query": qname, "profile": prof,
+                        "steps": res.steps,
+                        "final_cpu": res.final.cpu_cores,
+                        "final_mem": res.final.memory_mb,
+                        "slo": rep.to_dict()}
+                cells.append(cell)
+                if verbose:
+                    cu = rep.catch_up_s
+                    print(f"{qname:4s} {prof:8s} {policy:6s} "
+                          f"steps={res.steps} viol={rep.violations} "
+                          f"catchup={'-' if cu is None else f'{cu:.0f}s'} "
+                          f"cpu_w={rep.cpu_slot_windows} "
+                          f"mb_w={rep.mb_windows:,.0f}", flush=True)
+    return {"cells": cells,
+            "meta": {"queries": queries, "profiles": profiles,
+                     "policies": list(policies), "windows": windows,
+                     "seed": seed, "max_level": max_level, "slack": slack}}
+
+
+def _cell(grid: dict, policy: str, query: str, profile: str) -> dict | None:
+    for c in grid["cells"]:
+        if (c["policy"], c["query"], c["profile"]) == (policy, query,
+                                                       profile):
+            return c
+    return None
+
+
+def comparison_rows(grid: dict) -> list[dict]:
+    """One row per (query, profile): ds2 vs justin on every SLO axis, plus
+    the resource-integral savings justin achieved."""
+    rows = []
+    for q in grid["meta"]["queries"]:
+        for prof in grid["meta"]["profiles"]:
+            d = _cell(grid, "ds2", q, prof)
+            j = _cell(grid, "justin", q, prof)
+            if d is None or j is None:
+                continue
+            row = {"query": q, "profile": prof}
+            for tag, c in (("ds2", d), ("justin", j)):
+                row[f"{tag}_steps"] = c["steps"]
+                row[f"{tag}_viol"] = c["slo"]["violations"]
+                row[f"{tag}_catchup_s"] = c["slo"]["catch_up_s"]
+                row[f"{tag}_cpu_w"] = c["slo"]["cpu_slot_windows"]
+                row[f"{tag}_mb_w"] = c["slo"]["mb_windows"]
+            row["cpu_w_saving"] = 1 - row["justin_cpu_w"] \
+                / max(row["ds2_cpu_w"], 1)
+            row["mb_w_saving"] = 1 - row["justin_mb_w"] \
+                / max(row["ds2_mb_w"], 1e-9)
+            rows.append(row)
+    return rows
+
+
+def grid_markdown(grid: dict) -> str:
+    """Render the comparison as a GitHub-flavored markdown table."""
+    rows = comparison_rows(grid)
+    head = ("| query | profile | steps d/j | SLO viol d/j | "
+            "catch-up d/j | CPU-slot-w d/j | MB-w d/j | "
+            "CPU saving | MEM saving |")
+    sep = "|" + "---|" * 9
+    out = [head, sep]
+
+    def cu(v):
+        return "-" if v is None else f"{v:.0f}s"
+
+    for r in rows:
+        out.append(
+            f"| {r['query']} | {r['profile']} "
+            f"| {r['ds2_steps']}/{r['justin_steps']} "
+            f"| {r['ds2_viol']}/{r['justin_viol']} "
+            f"| {cu(r['ds2_catchup_s'])}/{cu(r['justin_catchup_s'])} "
+            f"| {r['ds2_cpu_w']}/{r['justin_cpu_w']} "
+            f"| {r['ds2_mb_w']:,.0f}/{r['justin_mb_w']:,.0f} "
+            f"| {r['cpu_w_saving']:.0%} | {r['mb_w_saving']:.0%} |")
+    return "\n".join(out)

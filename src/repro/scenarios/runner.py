@@ -44,6 +44,11 @@ class ScenarioResult:
         last = self.final
         return last.achieved_rate >= slack * last.target
 
+    def slo(self, slack: float = 0.97, after_t: float = 0.0):
+        """SLO scorecard for this episode (see ``scenarios.metrics``)."""
+        from repro.scenarios.metrics import slo_report
+        return slo_report(self.history, slack, after_t)
+
     def summary(self) -> dict:
         last = self.final
         return {"policy": self.policy, "query": self.query,

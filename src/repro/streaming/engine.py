@@ -47,6 +47,31 @@ they are what the golden-trace regression test pins down):
     shifts per-window selectivity by O(chunk/tick_events) but leaves rate,
     busyness, θ and τ statistics — and therefore DS2/Justin decisions —
     unchanged on the golden traces.
+
+Paper-symbol map (what ``collect()`` hands the policies):
+
+=============  ==========================================================
+paper          here
+=============  ==========================================================
+busyness       ``busy_s / task_time_s`` per window — DS2's signal (§2.2)
+θ (theta)      ``1 - level_probes/reads``: the fraction of state reads
+               served without probing an on-"disk" LSM level (memtable +
+               block cache hits + bloom-filtered negatives) — Justin's
+               cache-hit-rate signal (§4.2); ``None`` for operators that
+               did no reads this window
+τ (tau_ms)     ``latency_ms / (reads+writes)``: mean state-access latency
+               measured by the LSM store — Justin's latency signal (§4.2)
+memory ladder  ``level_mb(level)`` = 158·2^level MB of managed memory per
+               task (§5's base grant); ``memory_level=None`` is ⊥, the
+               no-managed-memory grant for stateless operators; enacting
+               a new level goes through ``reconfigure`` → the state
+               backend ``resize`` (scale up/down) with a cold cache — the
+               stabilization period §5 describes
+C^t            ``reconfigure(new_config)`` applies the controller's
+               per-operator ``(parallelism, memory_level)``: parallelism
+               changes re-partition state by key hash, level changes
+               resize the backend
+=============  ==========================================================
 """
 from __future__ import annotations
 

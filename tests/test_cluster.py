@@ -1,0 +1,147 @@
+"""Cluster budget model + co-located admission arbitration.
+
+Unit tests drive :class:`Cluster` directly (budget never overdrawn, atomic
+deny, release frees capacity, arbitration orders); the end-to-end tests run
+two real episodes on one shared cluster and pin the PR's headline: a
+neighbor's scale-up that DS2's packaged allocation blocks is admitted when
+the first tenant runs Justin instead — because Justin's stateless operators
+hold no managed memory and its give-backs free shared capacity.
+"""
+import pytest
+
+from repro.core.controller import ControllerConfig
+from repro.core.justin import JustinParams
+from repro.scenarios import Cluster, ColocatedSpec, run_colocated
+from repro.scenarios.cluster import _arbitration_order
+
+
+# ----------------------------------------------------------------- unit
+def test_reserve_within_budget():
+    c = Cluster(cpu_slots=8, memory_mb=1000.0)
+    assert c.reserve("a", 4, 600.0)
+    assert c.reserve("b", 4, 400.0)
+    assert c.available() == (0, 0.0)
+
+
+def test_deny_leaves_state_untouched():
+    c = Cluster(cpu_slots=8, memory_mb=1000.0)
+    assert c.reserve("a", 4, 600.0)
+    assert not c.reserve("b", 4, 500.0)       # memory would overdraw
+    assert not c.reserve("b", 5, 100.0)       # cpu would overdraw
+    assert c.used_cpu == {"a": 4} and c.used_mem == {"a": 600.0}
+    assert c.available() == (4, 400.0)
+
+
+def test_reserve_replaces_own_footprint_not_adds():
+    c = Cluster(cpu_slots=8, memory_mb=1000.0)
+    assert c.reserve("a", 6, 900.0)
+    # growing within own replacement headroom is fine even though the
+    # naive sum (6+8, 900+1000) would not be
+    assert c.reserve("a", 8, 1000.0)
+    # shrink releases capacity for the neighbor
+    assert c.reserve("a", 2, 200.0)
+    assert c.reserve("b", 6, 800.0)
+
+
+def test_release():
+    c = Cluster(cpu_slots=4, memory_mb=100.0)
+    assert c.reserve("a", 4, 100.0)
+    assert not c.reserve("b", 1, 10.0)
+    c.release("a")
+    assert c.reserve("b", 1, 10.0)
+    assert c.available() == (3, 90.0)
+
+
+class _T:
+    def __init__(self, name, first_pending=None):
+        self.name = name
+        self.first_pending = first_pending
+
+
+def test_arbitration_orders():
+    c = Cluster(cpu_slots=10, memory_mb=1000.0)
+    c.reserve("big", 8, 200.0)
+    c.reserve("small", 1, 100.0)
+    ts = [_T("big"), _T("small", first_pending=2), _T("new")]
+    assert [t.name for t in _arbitration_order(ts, c, "priority")] \
+        == ["big", "small", "new"]
+    # fair share: ascending budget share (new=0, small=.1, big=.8)
+    assert [t.name for t in _arbitration_order(ts, c, "fair_share")] \
+        == ["new", "small", "big"]
+    # first come: oldest unserved request first, others keep spec order
+    ts2 = [_T("big", first_pending=3), _T("small", first_pending=1),
+           _T("new")]
+    assert [t.name for t in _arbitration_order(ts2, c, "first_come")] \
+        == ["small", "big", "new"]
+    with pytest.raises(ValueError):
+        _arbitration_order(ts, c, "lottery")
+
+
+def test_initial_placement_must_fit():
+    with pytest.raises(ValueError):
+        run_colocated([("ds2", "q1")], Cluster(cpu_slots=1, memory_mb=10.0),
+                      windows=1)
+
+
+# ----------------------------------------------------------- end-to-end
+def quick_cfg():
+    return ControllerConfig(decision_window_s=60.0, stabilization_s=30.0,
+                            justin=JustinParams(max_level=2))
+
+
+def run_pair(first_policy: str, windows: int = 5):
+    """Two q1 tenants on a cluster sized so both fit only if the first
+    tenant scales the Justin way (no managed grant on stateless tasks):
+    ds2 needs 4096 MB at its final config, justin 2832 MB, budget 7000."""
+    cluster = Cluster(cpu_slots=16, memory_mb=7000.0)
+    res = run_colocated(
+        [ColocatedSpec(first_policy, "q1", name="A"),
+         ColocatedSpec("ds2", "q1", name="B")],
+        cluster, windows=windows, cfg=quick_cfg())
+    return res
+
+
+def test_budget_never_exceeded_and_denials_retry():
+    res = run_pair("ds2")
+    # invariant: every window's totals stay within the budget
+    for cpu, mem in res.usage:
+        assert cpu <= res.cluster.cpu_slots
+        assert mem <= res.cluster.memory_mb + 1e-9
+    b = res.tenant("B")
+    # B's scale-up was denied and re-requested at every following window
+    assert len(b.denials) >= 2
+    assert b.denials == sorted(b.denials)
+    assert b.denials == list(range(b.denials[0],
+                                   b.denials[0] + len(b.denials)))
+    # a denied window is marked on the history row and B never converges
+    assert any(h.denied for h in b.history)
+    assert not b.slo().recovered
+
+
+def test_justin_frees_capacity_ds2_blocks():
+    """The PR's acceptance headline: the same neighbor B (always ds2) is
+    blocked when A runs ds2, admitted — and back above its SLO — when A
+    runs justin on the identical cluster budget."""
+    blocked = run_pair("ds2")
+    freed = run_pair("justin")
+    b_blocked = blocked.tenant("B")
+    b_freed = freed.tenant("B")
+    assert len(b_blocked.denials) >= 1
+    assert b_freed.denials == []
+    assert not b_blocked.slo().recovered
+    assert b_freed.slo().recovered
+    # justin's A meets its own target with strictly less memory held
+    a_ds2, a_justin = blocked.tenant("A"), freed.tenant("A")
+    assert a_justin.slo().recovered and a_ds2.slo().recovered
+    assert a_justin.history[-1].memory_mb < a_ds2.history[-1].memory_mb
+
+
+def test_colocated_summary_shape():
+    res = run_pair("justin", windows=3)
+    s = res.summary()
+    assert set(s["tenants"]) == {"A", "B"}
+    assert s["cluster"] == {"cpu_slots": 16, "memory_mb": 7000.0}
+    assert s["peak_cpu"] <= 16 and s["peak_mem"] <= 7000.0
+    for t in s["tenants"].values():
+        assert {"policy", "query", "steps", "denied_windows",
+                "slo"} <= set(t)

@@ -1,0 +1,76 @@
+"""Documentation stays real: the files exist, every documented command
+refers to code that is present and compiles, and the commands the
+acceptance criteria name are actually documented.
+
+The full ``--help`` smokes run in CI's docs job (``tools/check_docs.py``
+without ``--static``); tier-1 keeps to the static checks so the suite
+stays fast.
+"""
+import importlib.util
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+spec = importlib.util.spec_from_file_location(
+    "check_docs", REPO / "tools" / "check_docs.py")
+check_docs = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_docs)
+
+
+def test_docs_exist_and_are_substantial():
+    for f in ("README.md", "docs/architecture.md", "docs/golden-traces.md"):
+        p = REPO / f
+        assert p.exists(), f
+        assert len(p.read_text()) > 1500, f"{f} is a stub"
+
+
+def test_readme_documents_the_entry_points():
+    text = (REPO / "README.md").read_text()
+    for needle in ("--grid", "nexmark_eval.py", "colocation_demo.py",
+                   "pip install -e", "pytest"):
+        assert needle in text, needle
+
+
+def test_architecture_covers_required_topics():
+    text = (REPO / "docs" / "architecture.md").read_text().lower()
+    for topic in ("decision window", "sim_time_scale", "admission",
+                  "cluster", "bin-packing"):
+        assert topic in text, topic
+
+
+def test_golden_traces_doc_pins_the_quirks():
+    text = (REPO / "docs" / "golden-traces.md").read_text().lower()
+    assert "oldest" in text and "items()" in text     # memtable quirk
+    assert "resize" in text and "spill" in text       # resize semantics
+    assert "regenerat" in text                        # the workflow
+
+
+def test_extractor_handles_continuations_and_prefixes(tmp_path):
+    md = tmp_path / "x.md"
+    md.write_text(
+        "```bash\n"
+        "PYTHONPATH=src python benchmarks/nexmark_eval.py --grid \\\n"
+        "  --queries q1 --windows 3\n"
+        "$ pip install -e \".[test]\"\n"
+        "# a comment, not a command\n"
+        "python benchmarks/run.py episode   # trailing comment stripped\n"
+        "```\n")
+    cmds = check_docs.extract_commands(str(md))
+    assert cmds == [
+        "python benchmarks/nexmark_eval.py --grid --queries q1 --windows 3",
+        "pip install -e .[test]",
+        "python benchmarks/run.py episode"]
+
+
+def test_every_documented_command_parses_statically():
+    """All commands extracted from README/docs pass the static check
+    (scripts exist and byte-compile; pip/pytest surfaces present)."""
+    total, failures = 0, []
+    for path in check_docs.doc_files():
+        for cmd in check_docs.extract_commands(str(path)):
+            total += 1
+            err = check_docs.check_command(cmd, static=True)
+            if err is not None:
+                failures.append((cmd, err))
+    assert total >= 8, f"docs only document {total} commands"
+    assert not failures, failures

@@ -1,0 +1,121 @@
+"""SLO metrics on hand-built histories with known answers.
+
+Each synthetic ``HistoryRow`` list encodes a specific violation/catch-up
+shape so every reduction (violation windows, catch-up episodes, p95
+backlog, resource integrals, the full scorecard) is checked against a
+number derived by hand, not by re-running the engine.
+"""
+import pytest
+
+from repro.core.controller import HistoryRow
+from repro.scenarios.metrics import (CatchUp, catch_up_episodes,
+                                     catch_up_time_s, p95_backlog,
+                                     resource_integrals, slo_report,
+                                     violation_windows)
+
+
+def row(t, rate, target, *, cpu=4, mem=1000.0, backlog=0, denied=False):
+    return HistoryRow(t=t, step=0, achieved_rate=rate, cpu_cores=cpu,
+                      memory_mb=mem, config={}, triggered=False,
+                      target=target, backlog=backlog, denied=denied)
+
+
+# one 6-s window per row; target 100; slack 0.97 -> threshold 97
+#   w0 ok, w1-w2 violate (spike), w3 recovered, w4 ok
+SPIKE = [row(6.0, 100, 100), row(12.0, 80, 100, backlog=500),
+         row(18.0, 90, 100, backlog=900), row(24.0, 100, 100, backlog=100),
+         row(30.0, 100, 100)]
+
+
+def test_violation_windows():
+    assert violation_windows(SPIKE) == [1, 2]
+    assert violation_windows(SPIKE, slack=0.5) == []
+    # slack=1.0 turns the boundary windows into violations too
+    assert violation_windows([row(6, 99, 100)], slack=1.0) == [0]
+
+
+def test_catch_up_single_episode():
+    eps = catch_up_episodes(SPIKE)
+    assert eps == [CatchUp(onset_window=1, recovered_window=3,
+                           duration_s=12.0)]
+    assert catch_up_time_s(SPIKE) == 12.0
+
+
+def test_catch_up_after_t_excludes_cold_start():
+    # violation at w0 (cold start) and another at w3
+    h = [row(6, 50, 100), row(12, 100, 100), row(18, 100, 100),
+         row(24, 80, 100), row(30, 100, 100)]
+    assert catch_up_time_s(h) == 6.0            # both episodes last 6 s
+    eps = catch_up_episodes(h, after_t=10.0)    # cold start excluded
+    assert eps == [CatchUp(3, 4, 6.0)]
+
+
+def test_catch_up_after_t_excludes_ongoing_episode_whole():
+    """An episode whose onset precedes after_t is excluded entirely —
+    its tail windows must not re-enter as a fresh truncated episode."""
+    h = [row(6, 50, 100), row(12, 50, 100), row(18, 100, 100),
+         row(24, 80, 100), row(30, 100, 100)]
+    eps = catch_up_episodes(h, after_t=10.0)   # cuts the first episode open
+    assert eps == [CatchUp(3, 4, 6.0)]
+    assert catch_up_episodes(h, after_t=25.0) == []
+
+
+def test_catch_up_never_recovers_is_open_ended():
+    # violation persists through the last window: duration extends one
+    # (mean) window past the history's end rather than stopping at the
+    # last onset — 18-12 plus one 6-s window
+    h = [row(6, 100, 100), row(12, 50, 100), row(18, 60, 100)]
+    eps = catch_up_episodes(h)
+    assert eps == [CatchUp(onset_window=1, recovered_window=None,
+                           duration_s=12.0)]
+    assert not eps[0].recovered
+    assert catch_up_time_s(h) == 12.0
+
+
+def test_catch_up_open_final_window_scores_no_better_than_recovery():
+    """A policy still violating at the end must not beat one that
+    violated the same window and recovered in the next."""
+    still_bad = [row(6, 100, 100), row(12, 50, 100)]
+    recovered = [row(6, 100, 100), row(12, 50, 100), row(18, 100, 100)]
+    assert catch_up_time_s(still_bad) >= catch_up_time_s(recovered)
+    assert catch_up_time_s(still_bad) == 6.0
+
+
+def test_catch_up_none_when_clean():
+    assert catch_up_time_s([row(6, 100, 100), row(12, 100, 100)]) is None
+
+
+def test_p95_backlog():
+    assert p95_backlog([]) == 0.0
+    assert p95_backlog([row(6, 1, 1, backlog=40)]) == 40.0
+    h = [row(6 * i, 100, 100, backlog=b)
+         for i, b in enumerate([0, 100, 200, 300, 400])]
+    # sorted [0..400], pos = .95*4 = 3.8 -> 300 + .8*100
+    assert p95_backlog(h) == pytest.approx(380.0)
+
+
+def test_resource_integrals():
+    h = [row(6, 100, 100, cpu=2, mem=500.0),
+         row(12, 100, 100, cpu=4, mem=1500.0)]
+    assert resource_integrals(h) == (6, 2000.0)
+
+
+def test_slo_report_scorecard():
+    rep = slo_report(SPIKE)
+    assert rep.windows == 5
+    assert rep.violations == 2
+    assert rep.violation_windows == (1, 2)
+    assert rep.catch_up_s == 12.0
+    assert rep.recovered
+    assert rep.p95_backlog == pytest.approx(820.0)  # [0,0,100,500,900] @ .95
+    assert rep.cpu_slot_windows == 20
+    assert rep.mb_windows == 5000.0
+    assert rep.denied_windows == 0
+    d = rep.to_dict()
+    assert d["violation_windows"] == [1, 2]
+
+
+def test_slo_report_counts_denials():
+    h = [row(6, 100, 100), row(12, 80, 100, denied=True),
+         row(18, 80, 100, denied=True), row(24, 100, 100)]
+    assert slo_report(h).denied_windows == 2

@@ -1,0 +1,162 @@
+"""Docs command checker — CI's guarantee that documentation stays runnable.
+
+Extracts every command from fenced shell blocks in README.md and docs/*.md
+and verifies it still parses against the current tree:
+
+* ``python <script>.py ...`` — the script must exist; if it builds an
+  argparse CLI it is run with ``--help`` (arg surface must parse), else it
+  is byte-compiled (``py_compile``);
+* ``python -m pytest ...`` / ``pytest ...`` — pytest must be importable;
+* ``pip install ...`` — pyproject.toml must exist (never executed: CI
+  installs separately and the checker must not mutate the env);
+* heredocs (``python - <<EOF``) and non-command lines are skipped.
+
+Exit status is nonzero if any documented command fails, so a doc edit that
+references a renamed script or a dropped flag breaks the docs CI job.
+
+    python tools/check_docs.py [--static] [paths...]
+
+``--static`` skips the subprocess ``--help`` smokes (used by the tier-1
+test, which only asserts the documented surface exists).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import py_compile
+import re
+import shlex
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FENCE = re.compile(r"^```(\S*)\s*$")
+SHELL_LANGS = {"", "bash", "sh", "shell", "console"}
+
+
+def doc_files(paths: list[str] | None = None) -> list[str]:
+    if paths:
+        return paths
+    out = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        out += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                      if f.endswith(".md"))
+    return out
+
+
+def shell_blocks(text: str) -> list[str]:
+    """Contents of every shell-language fenced code block."""
+    blocks, cur, lang = [], None, None
+    for line in text.splitlines():
+        m = FENCE.match(line.strip())
+        if m:
+            if cur is None:
+                lang = m.group(1).lower()
+                cur = []
+            else:
+                if lang in SHELL_LANGS:
+                    blocks.append("\n".join(cur))
+                cur, lang = None, None
+            continue
+        if cur is not None:
+            cur.append(line)
+    return blocks
+
+
+def extract_commands(path: str) -> list[str]:
+    """Command lines (env prefixes stripped, ``$ `` prompts removed) that
+    invoke python/pip/pytest from one markdown file."""
+    cmds = []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for block in shell_blocks(text):
+        # join backslash line continuations so multi-line invocations
+        # (the form CI itself uses) are checked as one command
+        joined = re.sub(r"\\\s*\n\s*", " ", block)
+        for raw in joined.splitlines():
+            line = raw.strip()
+            if line.startswith("$ "):
+                line = line[2:]
+            if not line or line.startswith("#"):
+                continue
+            try:
+                toks = shlex.split(line, comments=True)
+            except ValueError:
+                continue
+            while toks and re.match(r"^\w+=", toks[0]):   # env prefixes
+                toks = toks[1:]
+            if toks and toks[0] in ("python", "python3", "pip", "pytest"):
+                cmds.append(" ".join(toks))
+    return cmds
+
+
+def check_command(cmd: str, *, static: bool = False) -> str | None:
+    """None if the command parses, else a failure description."""
+    toks = shlex.split(cmd)
+    prog, rest = toks[0], toks[1:]
+    if prog == "pip":
+        return None if os.path.exists(os.path.join(REPO, "pyproject.toml")) \
+            else "pip install documented but pyproject.toml is missing"
+    if prog == "pytest" or rest[:2] == ["-m", "pytest"]:
+        try:
+            import pytest                                   # noqa: F401
+            return None
+        except ImportError:
+            return "pytest documented but not importable"
+    if rest and rest[0] == "-":                             # heredoc stdin
+        return None
+    script = next((t for t in rest if t.endswith(".py")), None)
+    if script is None:
+        return None                                         # e.g. python -c
+    spath = os.path.join(REPO, script)
+    if not os.path.exists(spath):
+        return f"documented script does not exist: {script}"
+    with open(spath, encoding="utf-8") as f:
+        src = f.read()
+    if "argparse" not in src or static:
+        try:
+            py_compile.compile(spath, doraise=True)
+            return None
+        except py_compile.PyCompileError as e:
+            return f"{script} does not compile: {e}"
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    try:
+        r = subprocess.run([sys.executable, spath, "--help"], env=env,
+                           capture_output=True, text=True, timeout=120,
+                           cwd=REPO)
+    except subprocess.TimeoutExpired:
+        return f"`{script} --help` hung (>120 s)"
+    if r.returncode != 0:
+        return f"`{script} --help` exited {r.returncode}: {r.stderr[-300:]}"
+    return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="smoke-check documented commands")
+    ap.add_argument("paths", nargs="*", help="markdown files (default: "
+                    "README.md + docs/*.md)")
+    ap.add_argument("--static", action="store_true",
+                    help="existence/compile checks only, no subprocesses")
+    args = ap.parse_args()
+    failures, checked = [], 0
+    for path in doc_files(args.paths):
+        for cmd in extract_commands(path):
+            checked += 1
+            err = check_command(cmd, static=args.static)
+            status = "ok " if err is None else "FAIL"
+            print(f"[{status}] {os.path.relpath(path, REPO)}: {cmd}")
+            if err is not None:
+                failures.append((path, cmd, err))
+    for path, cmd, err in failures:
+        print(f"\n{os.path.relpath(path, REPO)}: `{cmd}`\n  {err}",
+              file=sys.stderr)
+    print(f"\n{checked} documented commands checked, "
+          f"{len(failures)} failing")
+    return 1 if failures or checked == 0 else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
