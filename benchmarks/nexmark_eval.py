@@ -4,6 +4,12 @@ For each query: steps to converge, achieved rate vs target, final CPU cores
 and memory MB, plus the per-window history (capacity/CPU/mem over time —
 the Fig. 5 curves) dumped to JSON.
 
+``--policy`` selects which registered scaling policies to run (default:
+ds2 + justin, the paper's pair; any name from
+``repro.core.policy.available_policies()`` works — e.g. ``--policy
+threshold`` runs the Dhalion-style reactive baseline alone).  The
+ds2-vs-justin savings row is computed whenever both are in the set.
+
 ``max_level=2`` reproduces the paper's observed trajectories (operators cap
 at one scale-up, final configs (p, 316 MB)); the Algorithm-1-literal
 ``max_level=3`` ablation is also recorded.  See EXPERIMENTS.md §Nexmark.
@@ -11,7 +17,8 @@ at one scale-up, final configs (p, 316 MB)); the Algorithm-1-literal
 ``--grid`` switches to the policy × profile × query evaluation grid
 (``repro.scenarios.grid``): every combination's steps-to-converge,
 SLO-violation count, catch-up time and CPU/MB resource-time integrals,
-written as JSON and printed as a ds2-vs-justin markdown table.
+written as JSON and printed as markdown tables.  ``--grid-policies``
+restricts the policy set (default: every registered policy).
 """
 from __future__ import annotations
 
@@ -22,22 +29,28 @@ import time
 
 from repro.core.controller import AutoScaler, ControllerConfig
 from repro.core.justin import JustinParams
+from repro.core.policy import available_policies, make_policy
 from repro.data.nexmark import QUERIES, TARGET_RATES
 from repro.streaming.engine import StreamEngine
+
+DEFAULT_POLICIES = ("ds2", "justin")
 
 
 def evaluate(queries=None, *, max_level: int = 2, seed: int = 3,
              verbose: bool = True, profile: str | None = None,
-             windows: int = 8) -> dict:
-    """Justin vs DS2 per query.  ``profile=None`` reproduces the paper's
-    fixed-target protocol; a named profile ("ramp", "spike", "diurnal",
-    "sinusoid", "step") runs the same comparison under a dynamic workload
-    via the scenario subsystem."""
+             windows: int = 8, policies=None) -> dict:
+    """One episode per (query, policy).  ``profile=None`` reproduces the
+    paper's fixed-target protocol; a named profile ("ramp", "spike",
+    "diurnal", "sinusoid", "step") runs the same comparison under a dynamic
+    workload via the scenario subsystem.  ``policies`` may be any subset of
+    the registry (default: the paper's ds2/justin pair)."""
     queries = queries or list(QUERIES)
-    out: dict = {"max_level": max_level, "profile": profile, "queries": {}}
+    policies = list(policies or DEFAULT_POLICIES)
+    out: dict = {"max_level": max_level, "profile": profile,
+                 "policies": policies, "queries": {}}
     for qname in queries:
         row = {}
-        for policy in ("ds2", "justin"):
+        for policy in policies:
             t0 = time.time()
             if profile is not None:
                 from repro.scenarios import run_scenario
@@ -48,33 +61,41 @@ def evaluate(queries=None, *, max_level: int = 2, seed: int = 3,
             else:
                 flow = QUERIES[qname]()
                 eng = StreamEngine(flow, seed=seed)
-                ctl = AutoScaler(eng, TARGET_RATES[qname], ControllerConfig(
-                    policy=policy, justin=JustinParams(max_level=max_level)))
+                cfg = ControllerConfig(
+                    policy=policy, justin=JustinParams(max_level=max_level))
+                ctl = AutoScaler(eng, TARGET_RATES[qname], cfg,
+                                 policy=make_policy(policy, cfg))
                 hist = ctl.run()
                 s = ctl.summary()
             s["wall_s"] = round(time.time() - t0, 1)
             s["history"] = [dataclasses.asdict(h) for h in hist]
             row[policy] = s
             if verbose:
-                print(f"{qname:4s} {policy:6s} steps={s['steps']} "
+                print(f"{qname:4s} {policy:9s} steps={s['steps']} "
                       f"rate={s['achieved_rate']:,.0f}/{s['target']:,} "
                       f"cpu={s['cpu_cores']} mem={s['memory_mb']:,.0f}MB "
                       f"({s['wall_s']}s)", flush=True)
-        d, j = row["ds2"], row["justin"]
-        row["cpu_saving"] = 1 - j["cpu_cores"] / d["cpu_cores"]
-        row["mem_saving"] = 1 - j["memory_mb"] / d["memory_mb"]
-        row["steps_justin_vs_ds2"] = (j["steps"], d["steps"])
-        if verbose:
-            print(f"  -> CPU saving {row['cpu_saving']:.0%}  "
-                  f"MEM saving {row['mem_saving']:.0%}  "
-                  f"steps {j['steps']} vs {d['steps']}", flush=True)
+        if "ds2" in row and "justin" in row:
+            d, j = row["ds2"], row["justin"]
+            row["cpu_saving"] = 1 - j["cpu_cores"] / d["cpu_cores"]
+            row["mem_saving"] = 1 - j["memory_mb"] / d["memory_mb"]
+            row["steps_justin_vs_ds2"] = (j["steps"], d["steps"])
+            if verbose:
+                print(f"  -> CPU saving {row['cpu_saving']:.0%}  "
+                      f"MEM saving {row['mem_saving']:.0%}  "
+                      f"steps {j['steps']} vs {d['steps']}", flush=True)
         out["queries"][qname] = row
     return out
 
 
 def main() -> None:
+    policy_names = available_policies()
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", nargs="*", default=None)
+    ap.add_argument("--policy", nargs="+", default=None,
+                    choices=policy_names, dest="policies",
+                    help="registered policies to evaluate (default: ds2 "
+                         f"justin; registry: {', '.join(policy_names)})")
     ap.add_argument("--max-level", type=int, default=2)
     ap.add_argument("--profile", default=None,
                     choices=["constant", "ramp", "spike", "diurnal",
@@ -84,13 +105,17 @@ def main() -> None:
     ap.add_argument("--windows", type=int, default=8)
     ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--grid", action="store_true",
-                    help="run the {ds2,justin} x {profiles} x {queries} "
+                    help="run the {policies} x {profiles} x {queries} "
                          "evaluation grid (SLO violations, catch-up time, "
                          "resource integrals) instead of the Fig. 5 episode")
-    ap.add_argument("--grid-profiles", nargs="*", default=None,
+    ap.add_argument("--grid-profiles", nargs="+", default=None,
                     choices=["constant", "ramp", "spike", "diurnal",
                              "sinusoid", "step"],
                     help="profile subset for --grid (default: all six)")
+    ap.add_argument("--grid-policies", nargs="+", default=None,
+                    choices=policy_names,
+                    help="policy subset for --grid (default: every "
+                         "registered policy)")
     ap.add_argument("--out", default=None,
                     help="output JSON (default: benchmarks/"
                          "nexmark_results.json, or nexmark_grid.json with "
@@ -99,8 +124,13 @@ def main() -> None:
     if args.grid and args.profile is not None:
         ap.error("--profile applies to the Fig. 5 episode; with --grid "
                  "use --grid-profiles to restrict the profile set")
-    if args.grid_profiles is not None and not args.grid:
-        ap.error("--grid-profiles requires --grid")
+    if args.grid and args.policies is not None:
+        ap.error("--policy applies to the Fig. 5 episode; with --grid "
+                 "use --grid-policies to restrict the policy set")
+    for flag, val in (("--grid-profiles", args.grid_profiles),
+                      ("--grid-policies", args.grid_policies)):
+        if val is not None and not args.grid:
+            ap.error(f"{flag} requires --grid")
     if args.out is None:
         args.out = "benchmarks/nexmark_grid.json" if args.grid \
             else "benchmarks/nexmark_results.json"
@@ -108,14 +138,14 @@ def main() -> None:
         from repro.scenarios.grid import grid_markdown, run_grid
         # default to the fast queries; pass --queries for the pressured ones
         queries = args.queries or ["q1", "q5"]
-        res = run_grid(queries, args.grid_profiles,
+        res = run_grid(queries, args.grid_profiles, args.grid_policies,
                        windows=args.windows, seed=args.seed,
                        max_level=args.max_level)
         print(grid_markdown(res))
     else:
         res = evaluate(args.queries, max_level=args.max_level,
                        profile=args.profile, windows=args.windows,
-                       seed=args.seed)
+                       seed=args.seed, policies=args.policies)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=1, default=float)
     print(f"wrote {args.out}")

@@ -62,12 +62,15 @@ def bench_episode_autoscale() -> None:
 
 
 def bench_scenarios() -> None:
-    """Dynamic-workload scenarios (ramp/spike) through the controller."""
+    """Dynamic-workload scenarios through the controller — one episode per
+    registered policy family (model-based justin, reactive threshold,
+    fixed static) plus justin under a spike."""
     from repro.scenarios import run_scenario
-    for prof in ("ramp", "spike"):
+    for policy, prof in (("justin", "ramp"), ("justin", "spike"),
+                         ("threshold", "ramp"), ("static", "ramp")):
         t0 = time.time()
-        r = run_scenario("justin", "q5", prof, windows=6)
-        _row(f"scenario_q5_{prof}", (time.time() - t0) * 1e6,
+        r = run_scenario(policy, "q5", prof, windows=6)
+        _row(f"scenario_q5_{prof}_{policy}", (time.time() - t0) * 1e6,
              f"steps={r.steps};recovered={r.recovered()};"
              f"cpu={r.final.cpu_cores}")
 

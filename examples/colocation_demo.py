@@ -16,6 +16,7 @@ import argparse
 
 from repro.core.controller import ControllerConfig
 from repro.core.justin import JustinParams
+from repro.core.policy import available_policies
 from repro.scenarios import ADMISSION_POLICIES, Cluster, ColocatedSpec, \
     run_colocated
 
@@ -42,11 +43,15 @@ def main() -> None:
     ap.add_argument("--memory-mb", type=float, default=7000.0)
     ap.add_argument("--admission", default="priority",
                     choices=list(ADMISSION_POLICIES))
+    ap.add_argument("--tenant-a", nargs="+", default=["ds2", "justin"],
+                    choices=available_policies(),
+                    help="policies to try as tenant A (B stays ds2); any "
+                         "registered policy works")
     args = ap.parse_args()
 
     cfg = ControllerConfig(decision_window_s=60.0, stabilization_s=30.0,
                            justin=JustinParams(max_level=2))
-    for a_policy in ("ds2", "justin"):
+    for a_policy in args.tenant_a:
         print(f"\n=== tenant A runs {a_policy}; tenant B always ds2 ===")
         cluster = Cluster(cpu_slots=args.cpu_slots,
                           memory_mb=args.memory_mb)
@@ -56,9 +61,10 @@ def main() -> None:
             cluster, windows=args.windows, cfg=cfg,
             admission=args.admission)
         show(res)
-    print("\nDS2's one-size-fits-all grants exhaust the shared budget and "
-          "block the neighbor;\nJustin meets the same target while leaving "
-          "room for B's scale-up.")
+    if args.tenant_a == ["ds2", "justin"]:
+        print("\nDS2's one-size-fits-all grants exhaust the shared budget "
+              "and block the neighbor;\nJustin meets the same target while "
+              "leaving room for B's scale-up.")
 
 
 if __name__ == "__main__":

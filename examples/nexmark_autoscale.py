@@ -1,6 +1,9 @@
 """Paper §5 demo: hybrid elastic scaling on Nexmark, with the Fig. 5-style
 reconfiguration trace printed per decision window.
 
+``policy`` may be any registered scaling policy (ds2, justin, static,
+threshold, or your own ``@register_policy`` — see docs/policies.md).
+
 Run:  PYTHONPATH=src python examples/nexmark_autoscale.py [query] [policy]
       (defaults: q11 justin)
 """
@@ -8,18 +11,23 @@ import sys
 
 from repro.core.controller import AutoScaler, ControllerConfig
 from repro.core.justin import JustinParams
+from repro.core.policy import available_policies, make_policy
 from repro.data.nexmark import QUERIES, TARGET_RATES
 from repro.streaming.engine import StreamEngine
 
 qname = sys.argv[1] if len(sys.argv) > 1 else "q11"
 policy = sys.argv[2] if len(sys.argv) > 2 else "justin"
+if policy not in available_policies():
+    sys.exit(f"unknown policy {policy!r}; "
+             f"registered: {', '.join(available_policies())}")
 
 flow = QUERIES[qname]()
 print(f"query {qname}: operators "
       f"{[(n, d.op.stateful) for n, d in flow.nodes.items()]}")
 eng = StreamEngine(flow, seed=3)
-ctl = AutoScaler(eng, TARGET_RATES[qname], ControllerConfig(
-    policy=policy, justin=JustinParams(max_level=2)))
+cfg = ControllerConfig(policy=policy, justin=JustinParams(max_level=2))
+ctl = AutoScaler(eng, TARGET_RATES[qname], cfg,
+                 policy=make_policy(policy, cfg))
 history = ctl.run()
 
 print(f"\n{'t':>6} {'step':>4} {'rate':>10} {'cpu':>4} {'mem MB':>8}  config")

@@ -18,9 +18,11 @@ print(f"10 steps: loss {result['first_loss']:.3f} -> "
 print("=== 2. Justin vs DS2 on Nexmark q11 ===")
 from repro.core.controller import AutoScaler, ControllerConfig  # noqa: E402
 from repro.core.justin import JustinParams                # noqa: E402
+from repro.core.policy import available_policies          # noqa: E402
 from repro.data.nexmark import QUERIES, TARGET_RATES      # noqa: E402
 from repro.streaming.engine import StreamEngine           # noqa: E402
 
+print(f"(registered scaling policies: {', '.join(available_policies())})")
 for policy in ("ds2", "justin"):
     eng = StreamEngine(QUERIES["q11"](), seed=3)
     ctl = AutoScaler(eng, TARGET_RATES["q11"], ControllerConfig(

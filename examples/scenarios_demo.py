@@ -29,8 +29,11 @@ def show(result) -> None:
 def main() -> None:
     query = sys.argv[1] if len(sys.argv) > 1 else "q5"
 
-    # 1. ramp: load climbs to the paper's target — scale-out staircase
-    for policy in ("ds2", "justin"):
+    # 1. ramp: load climbs to the paper's target — scale-out staircase.
+    # One episode per registered policy family: model-based ds2/justin,
+    # reactive threshold, and the fixed static baseline (which shows what
+    # "no autoscaler" costs under the same ramp).
+    for policy in ("ds2", "justin", "threshold", "static"):
         show(run_scenario(policy, query, "ramp", windows=6))
 
     # 2. spike with a straggler appearing mid-spike (and recovering).

@@ -1,36 +1,46 @@
 """Reconfiguration controller: the auto-scaler loop (§5 protocol).
 
-Runs the engine in decision windows; on a trigger computes DS2 (and, in
-"justin" mode, Algorithm 1 over it), enacts the new configuration via the
-engine (state re-partition / backend resize) and the bin-packing placement,
-then waits a stabilization period.  History rows capture what Fig. 5 plots:
-achieved rate, CPU cores, memory MB, per step — plus the per-window backlog
-and admission outcomes the SLO/cluster layers consume.
+Runs the engine in decision windows; on a policy trigger asks the
+:class:`~repro.core.policy.ScalingPolicy` for a proposed configuration,
+enacts it via the engine (state re-partition / backend resize) and the
+bin-packing placement, then waits a stabilization period.  History rows
+capture what Fig. 5 plots: achieved rate, CPU cores, memory MB, per step —
+plus the per-window backlog and admission outcomes the SLO/cluster layers
+consume.
+
+The controller is policy-agnostic: ``ControllerConfig.policy`` is a
+registry name resolved through :func:`repro.core.policy.make_policy`
+(``ds2``, ``justin``, ``static``, ``threshold``, or anything registered
+with ``@register_policy``), and a pre-built policy instance may be passed
+directly.  Everything policy-specific — DS2's uniform memory packages,
+Justin's Algorithm-1 decision history and its deferred commit, a threshold
+scaler's symptom detection — lives behind the policy protocol.
 
 Co-location support: an ``AutoScaler`` may be constructed with an
 ``admission`` hook, consulted whenever a proposed reconfiguration would
 *grow* the episode's resource footprint (more CPU slots or more memory than
-the current placement).  A denied request leaves the configuration — and, in
-"justin" mode, the Algorithm-1 decision history — untouched, so the trigger
-persists and the same request is re-made at the next window boundary.
-Scale-downs (Justin giving memory back, DS2 scaling in) are never gated:
-they free shared-cluster capacity.  ``run`` with no hook is byte-identical
-to the single-tenant loop the golden traces pin.
+the current placement).  A denied request leaves the configuration — and
+the policy's decision history, because ``commit`` is only called on
+admission — untouched, so the trigger persists and the same request is
+re-made at the next window boundary.  Scale-downs (Justin giving memory
+back, DS2 scaling in) are never gated: they free shared-cluster capacity.
+``run`` with no hook is byte-identical to the single-tenant loop the
+golden traces pin.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from repro.core.ds2 import ds2_parallelism, should_trigger
-from repro.core.justin import (JustinParams, JustinState, OperatorDecision,
-                               commit, justin_policy)
+from repro.core.justin import JustinParams
 from repro.core.placement import TMSpec, placement_for_config
+from repro.core.policy import ScalingPolicy, make_policy
 from repro.streaming.engine import StreamEngine
 
 
 @dataclass(frozen=True)
 class ControllerConfig:
-    policy: str = "justin"                 # "justin" | "ds2"
+    policy: str = "justin"                 # registry name; see
+                                           # repro.core.policy
     decision_window_s: float = 120.0
     stabilization_s: float = 60.0
     busy_high: float = 0.8
@@ -60,12 +70,15 @@ class HistoryRow:
 class AutoScaler:
     def __init__(self, engine: StreamEngine, target_rate: float,
                  cfg: ControllerConfig = ControllerConfig(),
-                 *, admission=None):
+                 *, admission=None, policy: ScalingPolicy | None = None):
         self.engine = engine
         self.flow = engine.flow
         self.target = target_rate
         self.cfg = cfg
-        self.jstate = JustinState()
+        # the policy drives every decision; by default it is constructed
+        # from the registry under this episode's config
+        self.policy = policy if policy is not None \
+            else make_policy(cfg.policy, cfg)
         self.history: list[HistoryRow] = []
         self.steps = 0
         # optional ``admission(scaler, new_config, cpu, mem) -> bool``:
@@ -77,45 +90,25 @@ class AutoScaler:
     def _window_s(self) -> float:
         return self.cfg.decision_window_s * self.cfg.sim_time_scale
 
-    def _propose(self, metrics: dict[str, dict]
-                 ) -> tuple[dict[str, tuple[int, int | None]],
-                            dict[str, OperatorDecision] | None]:
-        """Compute the policy's proposed C^t WITHOUT committing Justin's
-        decision history — commit must wait until the proposal is admitted
-        (a denied request never happened, as far as Algorithm 1 is
-        concerned)."""
-        ds2_p = ds2_parallelism(self.flow, metrics, self.target,
-                                target_busyness=self.cfg.target_busyness,
-                                max_parallelism=self.cfg.max_parallelism)
-        if self.cfg.policy == "ds2":
-            # DS2 couples memory to slots: every task keeps the base grant
-            # whether stateful or not (the engine maps stateless ops to ⊥)
-            return {op: (p, 0) for op, p in ds2_p.items()}, None
-        decisions = justin_policy(self.flow, metrics, ds2_p, self.jstate,
-                                  self.cfg.justin)
-        return {op: (d.parallelism, d.memory_level)
-                for op, d in decisions.items()}, decisions
-
     def decide(self, metrics: dict[str, dict]) -> dict[str, tuple[int, int | None]]:
         """Propose-and-commit in one call — the single-tenant convenience.
-        NOT admission-aware: it commits Justin's decision history
+        NOT admission-aware: it commits the policy's decision history
         unconditionally, so co-located drivers must go through
         ``step_window`` (which defers the commit until the proposal is
         admitted)."""
-        config, decisions = self._propose(metrics)
-        if decisions is not None:
-            commit(self.jstate, decisions, metrics)
-        return config
+        proposal = self.policy.propose(self.flow, metrics, self.target,
+                                       self.cfg)
+        self.policy.commit(metrics)
+        return proposal.config
 
     def resources(self, config: dict | None = None) -> tuple[int, float]:
         """(CPU slots, memory MB) the placement needs for ``config`` —
         the *current* flow configuration when not given, or a proposed C^t
-        (the admission hook's pre-enactment quote)."""
+        (the admission hook's pre-enactment quote).  The policy's
+        ``resources_config`` supplies the memory-coupling model (e.g. DS2
+        keeps the uniform base grant on every slot — Takeaway 1)."""
         config = config if config is not None else self.flow.config()
-        if self.cfg.policy == "ds2":
-            # one-size-fits-all: every slot keeps the base managed grant
-            # whether its task uses it or not (Takeaway 1)
-            config = {op: (p, 0) for op, (p, lvl) in config.items()}
+        config = self.policy.resources_config(config)
         pl = placement_for_config(config, base_mem_mb=self.cfg.base_mem_mb,
                                   exclude=set(self.flow.sources()))
         return pl.cpu_cores, pl.memory_mb
@@ -134,8 +127,8 @@ class AutoScaler:
         metrics = self.engine.collect()
         src = sum(metrics[s]["rate_out"] for s in self.flow.sources())
         trig = (self.steps < self.cfg.max_reconfigs
-                and should_trigger(self.flow, metrics, self.target,
-                                   busy_high=self.cfg.busy_high))
+                and self.policy.should_trigger(self.flow, metrics,
+                                               self.target, self.cfg))
         cpu, mem = self.resources()
         row = HistoryRow(
             t=self.engine.now, step=self.steps, achieved_rate=src,
@@ -146,7 +139,9 @@ class AutoScaler:
         self.history.append(row)
         if not trig:
             return True
-        new_config, decisions = self._propose(metrics)
+        proposal = self.policy.propose(self.flow, metrics, self.target,
+                                       self.cfg)
+        new_config = proposal.config
         if new_config != self.flow.config():
             cpu_new, mem_new = self.resources(new_config)
             grows = cpu_new > cpu or mem_new > mem
@@ -155,8 +150,7 @@ class AutoScaler:
                                            cpu_new, mem_new):
                 row.denied = True
                 return False        # retry at the next window boundary
-        if decisions is not None:
-            commit(self.jstate, decisions, metrics)
+        self.policy.commit(metrics)
         if new_config != self.flow.config():
             self.steps += 1
             self.engine.reconfigure(new_config)
@@ -187,8 +181,16 @@ class AutoScaler:
 
     # ------------------------------------------------------------- reporting
     def summary(self) -> dict:
+        if not self.history:
+            # zero-window summary: nothing observed yet, report the current
+            # placement rather than crashing on history[-1]
+            cpu, mem = self.resources()
+            return {"policy": self.policy.name, "steps": self.steps,
+                    "achieved_rate": 0.0, "target": self.target,
+                    "cpu_cores": cpu, "memory_mb": mem,
+                    "config": dict(self.flow.config()), "windows": 0}
         last = self.history[-1]
-        return {"policy": self.cfg.policy, "steps": self.steps,
+        return {"policy": self.policy.name, "steps": self.steps,
                 "achieved_rate": last.achieved_rate, "target": self.target,
                 "cpu_cores": last.cpu_cores, "memory_mb": last.memory_mb,
                 "config": {op: pc for op, pc in last.config.items()},

@@ -27,11 +27,11 @@ window) supports three orders:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 
 from repro.core.controller import AutoScaler, ControllerConfig
 from repro.core.justin import JustinParams
+from repro.core.policy import make_policy
 from repro.data.nexmark import QUERIES, TARGET_RATES
 from repro.scenarios.faults import FaultSchedule
 from repro.scenarios.metrics import SLOReport, slo_report
@@ -190,10 +190,11 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
 
     ``specs`` entries may be :class:`ColocatedSpec` or bare
     ``(policy, query)`` / ``(policy, query, profile)`` tuples.  ``cfg`` is a
-    *template*: its per-policy variant is derived per tenant (the ``policy``
-    field is overridden from the spec).  Episodes whose *initial* placement
-    already exceeds the budget raise — a cluster that cannot hold the
-    starting configurations is a sizing error, not an admission decision.
+    *template* shared by every tenant; each tenant's policy is constructed
+    from the registry by its spec's name (any registered policy works, not
+    just ds2/justin).  Episodes whose *initial* placement already exceeds
+    the budget raise — a cluster that cannot hold the starting
+    configurations is a sizing error, not an admission decision.
     """
     specs = [s if isinstance(s, ColocatedSpec) else ColocatedSpec(*s)
              for s in specs]
@@ -205,19 +206,18 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
         while name in names:
             name = f"{name}#{i}"
         names.add(name)
-        tcfg = dataclasses.replace(base, policy=spec.policy)
         target = spec.target if spec.target is not None \
             else TARGET_RATES[spec.query]
         profile = spec.profile
         if isinstance(profile, str):
             profile = make_profile(profile, target,
-                                   scenario_horizon_s(tcfg, windows))
+                                   scenario_horizon_s(base, windows))
         faults = spec.faults
         if isinstance(faults, (list, tuple)):
             faults = FaultSchedule(list(faults))
         engine = StreamEngine(QUERIES[spec.query](), seed=seed, warm=warm)
         scaler = AutoScaler(engine, profile(0.0) if profile else target,
-                            tcfg)
+                            base, policy=make_policy(spec.policy, base))
         tenants.append(TenantRun(spec=spec, name=name, scaler=scaler,
                                  profile=profile, faults=faults))
 

@@ -1,35 +1,40 @@
 """Policy × profile × query evaluation grid.
 
-Runs {ds2, justin} × {rate profiles} × {queries} through ``run_scenario``
-and reduces each episode to its SLO scorecard (``scenarios.metrics``),
-then lays the results out as ds2-vs-justin comparison rows: steps to
-converge, SLO-violation count, worst catch-up time, and the CPU/memory
-resource-time integrals — the axes Daedalus/Phoebe-style evaluations
-compare autoscalers on, and the ones the paper's "fewer total cluster
-resources" claim lives on.
+Runs every registered scaling policy (``repro.core.policy``; ds2, justin,
+static, threshold out of the box) × {rate profiles} × {queries} through
+``run_scenario`` and reduces each episode to its SLO scorecard
+(``scenarios.metrics``): steps to converge, SLO-violation count, worst
+catch-up time, and the CPU/memory resource-time integrals — the axes
+Daedalus/Phoebe-style evaluations compare autoscalers on, and the ones the
+paper's "fewer total cluster resources" claim lives on.
 
 ``benchmarks/nexmark_eval.py --grid`` is the CLI front end; the JSON it
-writes feeds plots, and :func:`grid_markdown` renders the same data as a
-README-ready table.
+writes feeds ``benchmarks/render_experiments.py`` (tables + per-query
+plots), and :func:`grid_markdown` renders the same data as README-ready
+tables: one all-policies cell table plus the ds2-vs-justin savings
+comparison when both are present.
 """
 from __future__ import annotations
 
+from repro.core.policy import available_policies
 from repro.data.nexmark import QUERIES
 from repro.scenarios.metrics import DEFAULT_SLACK, slo_report
 from repro.scenarios.runner import run_scenario
 
-POLICIES = ("ds2", "justin")
 PROFILES = ("constant", "ramp", "spike", "diurnal", "sinusoid", "step")
+# the pair the savings comparison (and the paper's Fig. 5) is built on
+BASELINE, CONTENDER = "ds2", "justin"
 
 
-def run_grid(queries=None, profiles=None, policies=POLICIES, *,
+def run_grid(queries=None, profiles=None, policies=None, *,
              windows: int = 8, seed: int = 3, max_level: int = 2,
              slack: float = DEFAULT_SLACK, verbose: bool = True) -> dict:
     """Run the full grid; returns ``{"cells": [...], "meta": {...}}`` where
     each cell is one (policy, query, profile) episode's summary + SLO
-    scorecard."""
+    scorecard.  ``policies`` defaults to every registered policy."""
     queries = list(queries or QUERIES)
     profiles = list(profiles or PROFILES)
+    policies = list(policies or available_policies())
     cells = []
     for qname in queries:
         for prof in profiles:
@@ -45,7 +50,7 @@ def run_grid(queries=None, profiles=None, policies=POLICIES, *,
                 cells.append(cell)
                 if verbose:
                     cu = rep.catch_up_s
-                    print(f"{qname:4s} {prof:8s} {policy:6s} "
+                    print(f"{qname:4s} {prof:8s} {policy:9s} "
                           f"steps={res.steps} viol={rep.violations} "
                           f"catchup={'-' if cu is None else f'{cu:.0f}s'} "
                           f"cpu_w={rep.cpu_slot_windows} "
@@ -56,7 +61,9 @@ def run_grid(queries=None, profiles=None, policies=POLICIES, *,
                      "seed": seed, "max_level": max_level, "slack": slack}}
 
 
-def _cell(grid: dict, policy: str, query: str, profile: str) -> dict | None:
+def grid_cell(grid: dict, policy: str, query: str, profile: str) -> dict | None:
+    """The (policy, query, profile) cell of a ``run_grid`` result, or None
+    — shared with benchmarks/render_experiments.py."""
     for c in grid["cells"]:
         if (c["policy"], c["query"], c["profile"]) == (policy, query,
                                                        profile):
@@ -66,16 +73,17 @@ def _cell(grid: dict, policy: str, query: str, profile: str) -> dict | None:
 
 def comparison_rows(grid: dict) -> list[dict]:
     """One row per (query, profile): ds2 vs justin on every SLO axis, plus
-    the resource-integral savings justin achieved."""
+    the resource-integral savings justin achieved.  Empty when the grid
+    was run without the ds2/justin pair."""
     rows = []
     for q in grid["meta"]["queries"]:
         for prof in grid["meta"]["profiles"]:
-            d = _cell(grid, "ds2", q, prof)
-            j = _cell(grid, "justin", q, prof)
+            d = grid_cell(grid, BASELINE, q, prof)
+            j = grid_cell(grid, CONTENDER, q, prof)
             if d is None or j is None:
                 continue
             row = {"query": q, "profile": prof}
-            for tag, c in (("ds2", d), ("justin", j)):
+            for tag, c in ((BASELINE, d), (CONTENDER, j)):
                 row[f"{tag}_steps"] = c["steps"]
                 row[f"{tag}_viol"] = c["slo"]["violations"]
                 row[f"{tag}_catchup_s"] = c["slo"]["catch_up_s"]
@@ -89,25 +97,50 @@ def comparison_rows(grid: dict) -> list[dict]:
     return rows
 
 
-def grid_markdown(grid: dict) -> str:
-    """Render the comparison as a GitHub-flavored markdown table."""
-    rows = comparison_rows(grid)
-    head = ("| query | profile | steps d/j | SLO viol d/j | "
-            "catch-up d/j | CPU-slot-w d/j | MB-w d/j | "
-            "CPU saving | MEM saving |")
-    sep = "|" + "---|" * 9
-    out = [head, sep]
+def _fmt_catchup(v) -> str:
+    return "-" if v is None else f"{v:.0f}s"
 
-    def cu(v):
-        return "-" if v is None else f"{v:.0f}s"
 
-    for r in rows:
-        out.append(
-            f"| {r['query']} | {r['profile']} "
-            f"| {r['ds2_steps']}/{r['justin_steps']} "
-            f"| {r['ds2_viol']}/{r['justin_viol']} "
-            f"| {cu(r['ds2_catchup_s'])}/{cu(r['justin_catchup_s'])} "
-            f"| {r['ds2_cpu_w']}/{r['justin_cpu_w']} "
-            f"| {r['ds2_mb_w']:,.0f}/{r['justin_mb_w']:,.0f} "
-            f"| {r['cpu_w_saving']:.0%} | {r['mb_w_saving']:.0%} |")
+def cells_markdown(grid: dict) -> str:
+    """Every (query, profile, policy) cell as one table row — works for any
+    policy set, which is what ``--grid`` runs by default."""
+    out = ["| query | profile | policy | steps | SLO viol | catch-up | "
+           "CPU-slot-w | MB-w |",
+           "|" + "---|" * 8]
+    for q in grid["meta"]["queries"]:
+        for prof in grid["meta"]["profiles"]:
+            for pol in grid["meta"]["policies"]:
+                c = grid_cell(grid, pol, q, prof)
+                if c is None:
+                    continue
+                s = c["slo"]
+                out.append(
+                    f"| {q} | {prof} | {pol} | {c['steps']} "
+                    f"| {s['violations']} | {_fmt_catchup(s['catch_up_s'])} "
+                    f"| {s['cpu_slot_windows']} | {s['mb_windows']:,.0f} |")
     return "\n".join(out)
+
+
+def grid_markdown(grid: dict) -> str:
+    """Render the grid as GitHub-flavored markdown: the all-policies cell
+    table, plus the ds2-vs-justin savings comparison when both ran."""
+    parts = [cells_markdown(grid)]
+    rows = comparison_rows(grid)
+    if rows:
+        head = ("| query | profile | steps d/j | SLO viol d/j | "
+                "catch-up d/j | CPU-slot-w d/j | MB-w d/j | "
+                "CPU saving | MEM saving |")
+        sep = "|" + "---|" * 9
+        out = [head, sep]
+        for r in rows:
+            out.append(
+                f"| {r['query']} | {r['profile']} "
+                f"| {r['ds2_steps']}/{r['justin_steps']} "
+                f"| {r['ds2_viol']}/{r['justin_viol']} "
+                f"| {_fmt_catchup(r['ds2_catchup_s'])}"
+                f"/{_fmt_catchup(r['justin_catchup_s'])} "
+                f"| {r['ds2_cpu_w']}/{r['justin_cpu_w']} "
+                f"| {r['ds2_mb_w']:,.0f}/{r['justin_mb_w']:,.0f} "
+                f"| {r['cpu_w_saving']:.0%} | {r['mb_w_saving']:.0%} |")
+        parts.append("\n".join(out))
+    return "\n\n".join(parts)

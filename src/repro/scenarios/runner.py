@@ -8,10 +8,12 @@ roughly ``W x 12`` seconds — ``scenario_horizon_s`` computes that.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 from repro.core.controller import (AutoScaler, ControllerConfig, HistoryRow)
 from repro.core.justin import JustinParams
+from repro.core.policy import make_policy
 from repro.data.nexmark import QUERIES, TARGET_RATES
 from repro.scenarios.faults import FaultSchedule
 from repro.scenarios.profiles import Profile, make_profile
@@ -65,17 +67,19 @@ def run_scenario(policy: str, query: str, profile: Profile | str,
                  windows: int = 8, seed: int = 3, max_level: int = 2,
                  cfg: ControllerConfig | None = None,
                  warm: bool = True) -> ScenarioResult:
-    """Drive ``policy`` ("justin" | "ds2") on Nexmark ``query`` under a
-    time-varying ``profile`` (a :class:`Profile` or a named shape from
+    """Drive ``policy`` (any registered name — see
+    ``repro.core.policy.available_policies()``) on Nexmark ``query`` under
+    a time-varying ``profile`` (a :class:`Profile` or a named shape from
     ``make_profile``) with optional fault injection.
 
     Returns the full controller history: what Fig. 5 plots, but over a
-    dynamic workload.
+    dynamic workload.  ``cfg`` is a template: its ``policy`` field is
+    overridden from the ``policy`` argument.
     """
     cfg = cfg or ControllerConfig(policy=policy,
                                   justin=JustinParams(max_level=max_level))
     if cfg.policy != policy:
-        raise ValueError(f"cfg.policy={cfg.policy!r} != policy={policy!r}")
+        cfg = dataclasses.replace(cfg, policy=policy)
     if isinstance(profile, str):
         profile = make_profile(profile, TARGET_RATES[query],
                                scenario_horizon_s(cfg, windows))
@@ -84,7 +88,8 @@ def run_scenario(policy: str, query: str, profile: Profile | str,
 
     flow = QUERIES[query]()
     engine = StreamEngine(flow, seed=seed, warm=warm)
-    scaler = AutoScaler(engine, profile(0.0), cfg)
+    scaler = AutoScaler(engine, profile(0.0), cfg,
+                        policy=make_policy(policy, cfg))
     fired: list = []
 
     def hook(eng, w):

@@ -18,7 +18,8 @@ spec.loader.exec_module(check_docs)
 
 
 def test_docs_exist_and_are_substantial():
-    for f in ("README.md", "docs/architecture.md", "docs/golden-traces.md"):
+    for f in ("README.md", "docs/architecture.md", "docs/policies.md",
+              "docs/golden-traces.md"):
         p = REPO / f
         assert p.exists(), f
         assert len(p.read_text()) > 1500, f"{f} is a stub"
@@ -26,8 +27,18 @@ def test_docs_exist_and_are_substantial():
 
 def test_readme_documents_the_entry_points():
     text = (REPO / "README.md").read_text()
-    for needle in ("--grid", "nexmark_eval.py", "colocation_demo.py",
-                   "pip install -e", "pytest"):
+    for needle in ("--grid", "--policy", "nexmark_eval.py",
+                   "colocation_demo.py", "pip install -e", "pytest"):
+        assert needle in text, needle
+
+
+def test_policies_doc_covers_registry_surface():
+    text = (REPO / "docs" / "policies.md").read_text()
+    for needle in ("register_policy", "make_policy", "available_policies",
+                   "propose", "commit", "resources_config",
+                   "should_trigger", "Proposal",
+                   "ds2", "justin", "static", "threshold",
+                   "--policy threshold"):
         assert needle in text, needle
 
 
@@ -60,6 +71,17 @@ def test_extractor_handles_continuations_and_prefixes(tmp_path):
         "python benchmarks/nexmark_eval.py --grid --queries q1 --windows 3",
         "pip install -e .[test]",
         "python benchmarks/run.py episode"]
+
+
+def test_flag_surface_smoke_catches_dropped_flags():
+    """The non-static checker --help-smokes documented commands AND
+    verifies every documented long flag is still on the CLI surface
+    (e.g. ``nexmark_eval.py --policy threshold`` in docs/policies.md)."""
+    err = check_docs.check_command(
+        "python examples/colocation_demo.py --no-such-flag")
+    assert err is not None and "--no-such-flag" in err
+    assert check_docs.check_command(
+        "python examples/colocation_demo.py --tenant-a justin") is None
 
 
 def test_every_documented_command_parses_statically():

@@ -14,6 +14,7 @@ import pytest
 
 from repro.core.controller import AutoScaler, ControllerConfig
 from repro.core.justin import JustinParams
+from repro.core.policy import make_policy
 from repro.data.nexmark import QUERIES, TARGET_RATES
 from repro.streaming.engine import StreamEngine
 
@@ -26,8 +27,12 @@ def run_episode(qname: str, policy: str) -> dict:
     meta = GOLDEN["_meta"]
     flow = QUERIES[qname]()
     eng = StreamEngine(flow, seed=meta["seed"])
-    ctl = AutoScaler(eng, TARGET_RATES[qname], ControllerConfig(
-        policy=policy, justin=JustinParams(max_level=meta["max_level"])))
+    cfg = ControllerConfig(
+        policy=policy, justin=JustinParams(max_level=meta["max_level"]))
+    # construct the policy explicitly through the registry: the traces pin
+    # that registry-built ds2/justin make byte-identical decisions
+    ctl = AutoScaler(eng, TARGET_RATES[qname], cfg,
+                     policy=make_policy(policy, cfg))
     hist = ctl.run()
     return {
         "steps": ctl.steps,

@@ -1,0 +1,164 @@
+"""The pluggable scaling-policy API: registry construction, the protocol
+hooks, the two new built-ins (static, threshold), a grid smoke over them,
+and the memory-pressured q8/q11 pair co-located under threshold vs justin.
+
+(The four golden traces in test_golden_trace.py pin that registry-built
+ds2/justin stay decision-identical; this file covers the API surface.)
+"""
+import pytest
+
+from repro.core.controller import AutoScaler, ControllerConfig
+from repro.core.justin import JustinParams
+from repro.core.policy import (DS2Policy, JustinPolicy, Proposal,
+                               ScalingPolicy, available_policies,
+                               make_policy, register_policy)
+from repro.data.nexmark import QUERIES, TARGET_RATES
+from repro.scenarios import Cluster, ColocatedSpec, run_colocated
+from repro.scenarios.grid import run_grid
+from repro.streaming.engine import StreamEngine
+
+
+# ------------------------------------------------------------------ registry
+def test_builtin_policies_registered():
+    names = available_policies()
+    assert {"ds2", "justin", "static", "threshold"} <= set(names)
+    assert names == sorted(names)
+
+
+def test_unknown_policy_error_lists_available():
+    with pytest.raises(ValueError) as e:
+        make_policy("dhalion-2", ControllerConfig())
+    msg = str(e.value)
+    assert "dhalion-2" in msg
+    for name in available_policies():
+        assert name in msg
+
+
+def test_make_policy_constructs_fresh_instances():
+    cfg = ControllerConfig(policy="justin")
+    a, b = make_policy("justin", cfg), make_policy("justin", cfg)
+    assert isinstance(a, JustinPolicy) and isinstance(b, JustinPolicy)
+    assert a is not b and a.state is not b.state      # per-episode history
+    assert a.name == "justin"
+    assert isinstance(make_policy("ds2", cfg), DS2Policy)
+
+
+def test_register_policy_roundtrip_and_type_check():
+    @register_policy("test-noop")
+    class NoopPolicy(ScalingPolicy):
+        def propose(self, flow, metrics, target, cfg):
+            return Proposal({op: (m["parallelism"], m["memory_level"])
+                             for op, m in metrics.items()})
+    try:
+        assert "test-noop" in available_policies()
+        made = make_policy("test-noop", ControllerConfig())
+        assert isinstance(made, NoopPolicy) and made.name == "test-noop"
+        with pytest.raises(TypeError):
+            register_policy("test-bad")(object)
+    finally:
+        from repro.core.policy import _REGISTRY
+        _REGISTRY.pop("test-noop", None)
+
+
+# ----------------------------------------------------- protocol semantics
+def _q1_scaler(policy: str) -> AutoScaler:
+    cfg = ControllerConfig(policy=policy,
+                           justin=JustinParams(max_level=2))
+    eng = StreamEngine(QUERIES["q1"](), seed=3, warm=False)
+    return AutoScaler(eng, TARGET_RATES["q1"], cfg)
+
+
+def test_no_string_dispatch_left_in_controller():
+    """The controller must consult only the policy object — the literal
+    ``cfg.policy ==`` branches are gone."""
+    import inspect
+    import repro.core.controller as controller
+    src = inspect.getsource(controller)
+    assert "cfg.policy ==" not in src and 'policy == "' not in src
+
+
+def test_resources_config_is_the_policy_memory_model():
+    config = {"source": (1, None), "op": (4, 2), "sink": (1, None)}
+    cfg = ControllerConfig()
+    ds2 = make_policy("ds2", cfg)
+    assert ds2.resources_config(config) == {
+        "source": (1, 0), "op": (4, 0), "sink": (1, 0)}
+    justin = make_policy("justin", cfg)
+    assert justin.resources_config(config) == config     # per-level grants
+    threshold = make_policy("threshold", cfg)
+    assert threshold.resources_config(config) == ds2.resources_config(config)
+
+
+def test_static_policy_never_reconfigures():
+    s = _q1_scaler("static")
+    hist = s.run(max_windows=4)
+    assert s.steps == 0
+    assert all(not h.triggered for h in hist)
+    cfgs = {tuple(sorted(h.config.items())) for h in hist}
+    assert len(cfgs) == 1                                # allocation fixed
+
+
+def test_threshold_policy_scales_out_uniform_memory():
+    s = _q1_scaler("threshold")
+    hist = s.run(max_windows=6)
+    assert s.steps >= 1
+    p0 = dict(hist[0].config)["currency_map"][0]
+    p1 = dict(hist[-1].config)["currency_map"][0]
+    assert p1 > p0                                       # reactive scale-out
+    # memory stays the uniform per-slot package: never a raised level
+    for h in hist:
+        for op, (p, lvl) in h.config.items():
+            assert lvl in (None, 0), (op, lvl)
+
+
+def test_summary_on_empty_history_is_zero_window():
+    s = _q1_scaler("justin")
+    out = s.summary()                                    # nothing ran yet
+    assert out["windows"] == 0 and out["steps"] == 0
+    assert out["achieved_rate"] == 0.0
+    assert out["cpu_cores"] > 0 and out["memory_mb"] > 0  # initial placement
+    assert out["policy"] == "justin"
+    assert out["config"] == s.flow.config()
+
+
+# ------------------------------------------------------------- grid smoke
+def test_grid_smoke_includes_new_policies():
+    grid = run_grid(["q1"], ["constant"], ("static", "threshold"),
+                    windows=3, max_level=0, verbose=False)
+    assert len(grid["cells"]) == 2
+    by_pol = {c["policy"]: c for c in grid["cells"]}
+    assert by_pol["static"]["steps"] == 0
+    assert by_pol["threshold"]["steps"] >= 1
+    # static is the floor: the elastic policy never violates MORE
+    assert by_pol["threshold"]["slo"]["violations"] \
+        <= by_pol["static"]["slo"]["violations"]
+
+
+# ------------------------------------- co-location: q8/q11 pressured pair
+def test_colocated_pressured_pair_threshold_vs_justin():
+    """The memory-pressured q8/q11 pair on one shared cluster, once under
+    justin and once under threshold.  The budget is sized to justin's
+    hybrid footprint: justin's proposals are all admitted, while the
+    threshold scaler's doubling ratchet keeps requesting packages the
+    budget cannot hold (denied, retried every following window)."""
+    cfg = ControllerConfig(decision_window_s=60.0, stabilization_s=30.0,
+                           justin=JustinParams(max_level=2))
+    out = {}
+    for pol in ("justin", "threshold"):
+        cluster = Cluster(cpu_slots=24, memory_mb=17000.0)
+        out[pol] = run_colocated(
+            [ColocatedSpec(pol, "q8", name="A8"),
+             ColocatedSpec(pol, "q11", name="B11")],
+            cluster, windows=5, cfg=cfg)
+        for cpu, mem in out[pol].usage:                  # never overdrawn
+            assert cpu <= cluster.cpu_slots
+            assert mem <= cluster.memory_mb + 1e-9
+    j, t = out["justin"], out["threshold"]
+    # justin's hybrid footprint fits the budget end to end
+    assert j.tenant("A8").denials == [] and j.tenant("B11").denials == []
+    assert j.tenant("A8").slo().recovered
+    assert j.tenant("B11").slo().recovered
+    # threshold's uniform doubling hits the ceiling and is re-denied at
+    # consecutive window boundaries
+    t_denials = t.tenant("A8").denials + t.tenant("B11").denials
+    assert len(t_denials) >= 2

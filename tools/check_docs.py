@@ -131,6 +131,17 @@ def check_command(cmd: str, *, static: bool = False) -> str | None:
         return f"`{script} --help` hung (>120 s)"
     if r.returncode != 0:
         return f"`{script} --help` exited {r.returncode}: {r.stderr[-300:]}"
+    # every long flag the doc uses must still be part of the CLI surface
+    # (catches a renamed/dropped --policy, --grid-policies, ... without
+    # running the full command); tokenized so --grid isn't satisfied by
+    # --grid-profiles surviving
+    help_flags = set(re.findall(r"--[A-Za-z0-9][-A-Za-z0-9_]*", r.stdout))
+    missing = [t for t in toks
+               if t.startswith("--") and t != "--help"
+               and t.split("=", 1)[0] not in help_flags]
+    if missing:
+        return (f"`{script} --help` does not mention documented flag(s) "
+                f"{', '.join(missing)}")
     return None
 
 
