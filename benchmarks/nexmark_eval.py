@@ -19,6 +19,14 @@ at one scale-up, final configs (p, 316 MB)); the Algorithm-1-literal
 SLO-violation count, catch-up time and CPU/MB resource-time integrals,
 written as JSON and printed as markdown tables.  ``--grid-policies``
 restricts the policy set (default: every registered policy).
+
+``--grid --admission <mode>`` additionally runs, per query, the
+ds2/justin pair co-located on one shared-TM cluster under that admission
+mode (``preemption`` lets the high-priority tenant's denied requests
+force the neighbor's storage levels down) and adds the co-location
+savings table: per-tenant denials, preemptions, private vs amortized
+memory integrals, and the shared-fleet saving.  ``--cluster-slots`` /
+``--cluster-mb`` override the auto-sized budget.
 """
 from __future__ import annotations
 
@@ -116,6 +124,18 @@ def main() -> None:
                     choices=policy_names,
                     help="policy subset for --grid (default: every "
                          "registered policy)")
+    ap.add_argument("--admission", default=None,
+                    choices=["priority", "fair_share", "first_come",
+                             "preemption"],
+                    help="with --grid: also run the per-query ds2/justin "
+                         "co-location on a shared-TM cluster under this "
+                         "admission mode (savings table gains amortized-"
+                         "memory + preemption columns)")
+    ap.add_argument("--cluster-slots", type=int, default=0,
+                    help="co-location cluster CPU slots (0 = auto-size "
+                         "from the pair's initial placements)")
+    ap.add_argument("--cluster-mb", type=float, default=0.0,
+                    help="co-location cluster memory MB (0 = auto-size)")
     ap.add_argument("--out", default=None,
                     help="output JSON (default: benchmarks/"
                          "nexmark_results.json, or nexmark_grid.json with "
@@ -128,9 +148,14 @@ def main() -> None:
         ap.error("--policy applies to the Fig. 5 episode; with --grid "
                  "use --grid-policies to restrict the policy set")
     for flag, val in (("--grid-profiles", args.grid_profiles),
-                      ("--grid-policies", args.grid_policies)):
+                      ("--grid-policies", args.grid_policies),
+                      ("--admission", args.admission)):
         if val is not None and not args.grid:
             ap.error(f"{flag} requires --grid")
+    if (args.cluster_slots or args.cluster_mb) \
+            and not (args.grid and args.admission):
+        ap.error("--cluster-slots/--cluster-mb apply to the co-location "
+                 "section: they require --grid --admission")
     if args.out is None:
         args.out = "benchmarks/nexmark_grid.json" if args.grid \
             else "benchmarks/nexmark_results.json"
@@ -140,7 +165,10 @@ def main() -> None:
         queries = args.queries or ["q1", "q5"]
         res = run_grid(queries, args.grid_profiles, args.grid_policies,
                        windows=args.windows, seed=args.seed,
-                       max_level=args.max_level)
+                       max_level=args.max_level, admission=args.admission,
+                       windows_colocated=args.windows,
+                       cluster_slots=args.cluster_slots,
+                       cluster_mb=args.cluster_mb)
         print(grid_markdown(res))
     else:
         res = evaluate(args.queries, max_level=args.max_level,

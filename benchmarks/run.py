@@ -93,6 +93,33 @@ def bench_colocation() -> None:
         _row(f"colocate_A_{a_policy}", (time.time() - t0) * 1e6,
              f"B_denied={len(b.denials)};B_recovered={b.slo().recovered};"
              f"peak_mem={max(m for _, m in res.usage):.0f}")
+    # preemptive admission: a static tenant pinned at storage level 2
+    # starves the high-priority DS2 tenant under priority; preemption
+    # reclaims its levels and the request is admitted
+    for adm in ("priority", "preemption"):
+        t0 = time.time()
+        res = run_colocated(
+            [ColocatedSpec("ds2", "q1", name="H"),
+             ColocatedSpec("static", "q11", name="V", target=5_000,
+                           config={"user_sessions": (6, 2)})],
+            Cluster(cpu_slots=16, memory_mb=8500.0), windows=5, cfg=cfg,
+            admission=adm)
+        h, v = res.tenant("H"), res.tenant("V")
+        _row(f"colocate_preempt_{adm}", (time.time() - t0) * 1e6,
+             f"H_denied={len(h.denials)};V_preempted={len(v.preemptions)};"
+             f"H_recovered={h.slo().recovered}")
+    # shared-TM packing: three small tenants on one slot-capped fleet pay
+    # two TMs' base memory instead of three private fleets'
+    from repro.core.placement import default_tm_spec
+    t0 = time.time()
+    cluster = Cluster(cpu_slots=6, memory_mb=20000.0,
+                      tm_spec=default_tm_spec())
+    res = run_colocated([("ds2", "q1")] * 3, cluster, windows=2, cfg=cfg)
+    shared = cluster.placement().memory_mb
+    private = sum(t.scaler.resources()[1] for t in res.tenants)
+    _row("colocate_shared_tm", (time.time() - t0) * 1e6,
+         f"shared_mb={shared:.0f};private_mb={private:.0f};"
+         f"saving={1 - shared / private:.2f}")
 
 
 def bench_justinserve() -> None:

@@ -8,7 +8,15 @@ denied window after window, leaving B below its target.  Run B: tenant A
 switches to Justin — same query, same target — and B's identical request
 is admitted, because Justin's stateless tasks hold no managed grant.
 
+The closing **preemption act** shows admission-aware placement v2: a
+static low-priority tenant pinned at a raised storage level starves a
+high-priority DS2 tenant forever under ``priority`` admission; under
+``preemption`` the arbiter forces the victim's storage level down
+(``AutoScaler.shrink_memory``) until the request fits, and the
+high-priority tenant recovers.
+
     PYTHONPATH=src python examples/colocation_demo.py
+    PYTHONPATH=src python examples/colocation_demo.py --admission preemption
 """
 from __future__ import annotations
 
@@ -30,10 +38,31 @@ def show(res) -> None:
         slo = t["slo"]
         print(f"  {name} ({t['policy']:6s} on {t['query']}): "
               f"steps={t['steps']} denied_windows={t['denied_windows']} "
+              f"preempted_windows={t['preempted_windows']} "
               f"violations={slo['violations']} "
               f"recovered={slo['recovered']} "
               f"cpu_slot_windows={slo['cpu_slot_windows']} "
               f"mb_windows={slo['mb_windows']:,.0f}")
+
+
+def preemption_act(windows: int) -> None:
+    """Priority starves the high-priority tenant; preemption re-shapes the
+    neighbor (forced storage-level give-backs) and it recovers."""
+    print("\n=== preemption act: high-priority DS2 vs a static tenant "
+          "pinned at storage level 2 ===")
+    cfg = ControllerConfig(decision_window_s=60.0, stabilization_s=30.0,
+                           justin=JustinParams(max_level=2))
+    for adm in ("priority", "preemption"):
+        specs = [ColocatedSpec("ds2", "q1", name="H"),
+                 ColocatedSpec("static", "q11", name="V", target=5_000,
+                               config={"user_sessions": (6, 2)})]
+        print(f"\n--- admission={adm} ---")
+        res = run_colocated(specs, Cluster(cpu_slots=16, memory_mb=8500.0),
+                            windows=windows, cfg=cfg, admission=adm)
+        show(res)
+    print("\nUnder priority, V's pinned grants leave H denied every "
+          "window; under preemption the arbiter\nreclaims V's storage "
+          "levels (2 -> 1 -> 0) and H's scale-out is admitted.")
 
 
 def main() -> None:
@@ -47,6 +76,8 @@ def main() -> None:
                     choices=available_policies(),
                     help="policies to try as tenant A (B stays ds2); any "
                          "registered policy works")
+    ap.add_argument("--no-preemption-act", action="store_true",
+                    help="skip the closing preemptive-admission act")
     args = ap.parse_args()
 
     cfg = ControllerConfig(decision_window_s=60.0, stabilization_s=30.0,
@@ -65,6 +96,8 @@ def main() -> None:
         print("\nDS2's one-size-fits-all grants exhaust the shared budget "
               "and block the neighbor;\nJustin meets the same target while "
               "leaving room for B's scale-up.")
+    if not args.no_preemption_act:
+        preemption_act(args.windows)
 
 
 if __name__ == "__main__":

@@ -26,13 +26,23 @@ re-made at the next window boundary.  Scale-downs (Justin giving memory
 back, DS2 scaling in) are never gated: they free shared-cluster capacity.
 ``run`` with no hook is byte-identical to the single-tenant loop the
 golden traces pin.
+
+Admission-aware placement v2: with a shared-TM ``cluster`` attached (the
+co-location driver sets ``scaler.cluster`` / ``scaler.tenant``), admission
+quotes go through ``resources(config, cluster=...)`` — the tenant's
+amortized attribution under the cluster-level packing rather than a
+private fleet's footprint — and ``shrink_memory()`` is the preemption
+entry point: the arbiter forces a one-level memory give-back (via the
+policy's ``propose_shrink``) to make a higher-priority tenant's request
+fit.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
 from repro.core.justin import JustinParams
-from repro.core.placement import TMSpec, placement_for_config
+from repro.core.placement import (TaskRequest, placement_for_config,
+                                  placement_requests)
 from repro.core.policy import ScalingPolicy, make_policy
 from repro.streaming.engine import StreamEngine
 
@@ -65,6 +75,11 @@ class HistoryRow:
     backlog: int = 0                  # queued events across all tasks
     denied: bool = False              # admission hook rejected this window's
                                       # scale-up request (retried next window)
+    preempted: bool = False           # a higher-priority tenant forced a
+                                      # memory give-back this window
+    amortized_mb: float | None = None  # shared-TM attribution (base_mb
+                                       # amortized across co-residents);
+                                       # None == private placement quote
 
 
 class AutoScaler:
@@ -85,6 +100,16 @@ class AutoScaler:
         # consulted before enacting a configuration that grows the resource
         # footprint (the cluster co-location arbitration point)
         self.admission = admission
+        # co-location identity + quoting context, set by the cluster driver:
+        # with a shared-TM ``cluster`` attached, admission quotes are the
+        # tenant's amortized attribution under the shared placement
+        self.tenant: str = ""
+        self.cluster = None
+        self.preemptions = 0          # forced give-backs suffered (not
+                                      # counted in ``steps``: they are the
+                                      # arbiter's reconfigs, not the
+                                      # policy's)
+        self._last_metrics: dict[str, dict] = {}
 
     # ------------------------------------------------------------------ core
     def _window_s(self) -> float:
@@ -101,17 +126,55 @@ class AutoScaler:
         self.policy.commit(metrics)
         return proposal.config
 
-    def resources(self, config: dict | None = None) -> tuple[int, float]:
+    def task_requests(self, config: dict | None = None) -> list[TaskRequest]:
+        """The tenant-tagged task list ``config`` asks the packer for —
+        what the shared-TM cluster packs alongside other tenants' tasks."""
+        config = config if config is not None else self.flow.config()
+        config = self.policy.resources_config(config)
+        return placement_requests(config, base_mem_mb=self.cfg.base_mem_mb,
+                                  exclude=set(self.flow.sources()),
+                                  tenant=self.tenant)
+
+    def resources(self, config: dict | None = None, *,
+                  cluster=None) -> tuple[int, float]:
         """(CPU slots, memory MB) the placement needs for ``config`` —
         the *current* flow configuration when not given, or a proposed C^t
         (the admission hook's pre-enactment quote).  The policy's
         ``resources_config`` supplies the memory-coupling model (e.g. DS2
-        keeps the uniform base grant on every slot — Takeaway 1)."""
+        keeps the uniform base grant on every slot — Takeaway 1).
+
+        With a shared-TM ``cluster``, the quote is this tenant's amortized
+        attribution under the cluster-level packing (its slots + managed
+        grants + its slot-proportional share of each co-resident TM's
+        ``base_mb``) instead of a private fleet's footprint."""
+        if cluster is not None and getattr(cluster, "shared", False):
+            return cluster.quote(self.tenant, self.task_requests(config))
         config = config if config is not None else self.flow.config()
         config = self.policy.resources_config(config)
         pl = placement_for_config(config, base_mem_mb=self.cfg.base_mem_mb,
                                   exclude=set(self.flow.sources()))
         return pl.cpu_cores, pl.memory_mb
+
+    def shrink_memory(self) -> tuple[int, float] | None:
+        """Forced memory give-back — the §4.3 preemption mechanism.  Asks
+        the policy for a one-level shrink proposal
+        (:meth:`ScalingPolicy.propose_shrink`), enacts it through the
+        normal reconfigure + stabilization path, and returns the new
+        private (cpu, mem) footprint; ``None`` when nothing can shrink.
+        Driven by the cluster arbiter when a higher-priority tenant's
+        admission needs the memory; the give-back is counted in
+        ``preemptions``, not ``steps`` (it is the arbiter's
+        reconfiguration, not this policy's)."""
+        prop = self.policy.propose_shrink(self.flow, self.cfg)
+        if prop is None or prop.config == self.flow.config():
+            return None
+        self.policy.commit(self._last_metrics)
+        self.engine.reconfigure(prop.config)
+        self.engine.run(self.cfg.stabilization_s * self.cfg.sim_time_scale,
+                        self.target)
+        self.engine.collect()
+        self.preemptions += 1
+        return self.resources()
 
     def step_window(self, w: int = 0, *, target_profile=None,
                     window_hook=None) -> bool:
@@ -125,6 +188,7 @@ class AutoScaler:
             window_hook(self.engine, w)
         self.engine.run(self._window_s(), self.target)
         metrics = self.engine.collect()
+        self._last_metrics = metrics
         src = sum(metrics[s]["rate_out"] for s in self.flow.sources())
         trig = (self.steps < self.cfg.max_reconfigs
                 and self.policy.should_trigger(self.flow, metrics,
@@ -143,8 +207,17 @@ class AutoScaler:
                                        self.cfg)
         new_config = proposal.config
         if new_config != self.flow.config():
-            cpu_new, mem_new = self.resources(new_config)
-            grows = cpu_new > cpu or mem_new > mem
+            # quote against the shared placement when a shared-TM cluster
+            # is attached: admission gates growth of the tenant's
+            # amortized attribution, not of a hypothetical private fleet
+            # (a scalar cluster quotes private placements — identical to
+            # the (cpu, mem) above, so don't re-pack)
+            shared = self.cluster if self.cluster is not None \
+                and self.cluster.shared else None
+            cpu_new, mem_new = self.resources(new_config, cluster=shared)
+            cpu_cur, mem_cur = (cpu, mem) if shared is None \
+                else self.resources(cluster=shared)
+            grows = cpu_new > cpu_cur or mem_new > mem_cur
             if grows and self.admission is not None \
                     and not self.admission(self, new_config,
                                            cpu_new, mem_new):
@@ -171,7 +244,10 @@ class AutoScaler:
         ``window_hook``: optional callable ``(engine, window_idx)`` fired
         before each window (fault injection point).
         """
-        windows = max_windows or (self.cfg.max_reconfigs + 4)
+        # explicit None check: ``max_windows=0`` means zero windows, not
+        # the default budget (the ``or`` idiom ran max_reconfigs + 4)
+        windows = max_windows if max_windows is not None \
+            else self.cfg.max_reconfigs + 4
         for w in range(windows):
             quiet = self.step_window(w, target_profile=target_profile,
                                      window_hook=window_hook)

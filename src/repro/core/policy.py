@@ -42,8 +42,8 @@ import math
 from dataclasses import dataclass
 
 from repro.core import ds2 as _ds2
-from repro.core.justin import (JustinState, commit as _justin_commit,
-                               justin_policy)
+from repro.core.justin import (JustinState, OperatorDecision,
+                               commit as _justin_commit, justin_policy)
 
 # A configuration C^t: per-operator (parallelism, memory_level), where the
 # level is None (⊥) for operators holding no managed memory.
@@ -95,6 +95,27 @@ class ScalingPolicy:
         """The last proposal was admitted (or enacted): fold its pending
         decision state into the policy's history.  Default: stateless."""
         self._last = None
+
+    def propose_shrink(self, flow, cfg) -> Proposal | None:
+        """Preemptive reclamation (§4.3): propose giving back ONE storage
+        level — drop the highest occupied memory level by one on the
+        operator holding it.  The cluster arbiter drives this when a
+        higher-priority tenant's admission needs the memory
+        (``AutoScaler.shrink_memory``).  Returns ``None`` when no operator
+        holds a level above 0 — uniform-package policies at the base
+        grant have nothing to give back, which is exactly the §4.3
+        asymmetry: only hybrid-scaled tenants can be re-shaped in place.
+        Like ``propose``, MUST NOT mutate history; ``commit`` does."""
+        config = flow.config()
+        cands = [(lvl, op) for op, (_p, lvl) in config.items()
+                 if lvl is not None and lvl > 0]
+        if not cands:
+            return None
+        lvl, op = max(cands)
+        new = dict(config)
+        new[op] = (config[op][0], lvl - 1)
+        self._last = Proposal(new)
+        return self._last
 
     def resources_config(self, config: Config) -> Config:
         """Map an enacted configuration to the per-task memory grants the
@@ -190,6 +211,16 @@ class JustinPolicy(ScalingPolicy):
         if self._last is not None and self._last.pending is not None:
             _justin_commit(self.state, self._last.pending, metrics)
         self._last = None
+
+    def propose_shrink(self, flow, cfg) -> Proposal | None:
+        """A forced give-back enters Algorithm 1's history as a plain
+        (not-scaled-up) decision, so the next window evaluates pressure
+        afresh instead of judging the shrink as a failed scale-up."""
+        prop = super().propose_shrink(flow, cfg)
+        if prop is not None:
+            prop.pending = {op: OperatorDecision(p, lvl, False)
+                            for op, (p, lvl) in prop.config.items()}
+        return prop
 
 
 @register_policy("static")

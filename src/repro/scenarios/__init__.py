@@ -22,11 +22,13 @@ from repro.scenarios.cluster import (ADMISSION_POLICIES, Cluster,
                                      TenantRun, run_colocated)
 from repro.scenarios.faults import (FaultSchedule, KillTask, SetStraggler,
                                     parse_fault)
-from repro.scenarios.grid import (comparison_rows, grid_markdown, run_grid)
-from repro.scenarios.metrics import (CatchUp, SLOReport, catch_up_episodes,
-                                     catch_up_time_s, p95_backlog,
-                                     resource_integrals, slo_report,
-                                     violation_windows)
+from repro.scenarios.grid import (colocation_markdown, comparison_rows,
+                                  grid_markdown, run_colocation, run_grid)
+from repro.scenarios.metrics import (CatchUp, SLOReport,
+                                     amortized_mb_windows,
+                                     catch_up_episodes, catch_up_time_s,
+                                     p95_backlog, resource_integrals,
+                                     slo_report, violation_windows)
 from repro.scenarios.profiles import (Constant, Diurnal, Profile, Ramp,
                                       Sinusoid, Spike, Step, make_profile)
 from repro.scenarios.runner import ScenarioResult, run_scenario
@@ -37,7 +39,9 @@ __all__ = [
     "parse_fault", "ScenarioResult", "run_scenario",
     "CatchUp", "SLOReport", "catch_up_episodes", "catch_up_time_s",
     "p95_backlog", "resource_integrals", "slo_report", "violation_windows",
+    "amortized_mb_windows",
     "ADMISSION_POLICIES", "Cluster", "ColocatedResult", "ColocatedSpec",
     "TenantRun", "run_colocated",
-    "comparison_rows", "grid_markdown", "run_grid",
+    "colocation_markdown", "comparison_rows", "grid_markdown",
+    "run_colocation", "run_grid",
 ]

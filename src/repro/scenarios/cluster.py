@@ -7,6 +7,14 @@ every episode owns an unbounded cluster.  This module makes it measurable:
 * :class:`Cluster` is a shared budget of CPU slots and memory MB with
   per-tenant accounting.  ``reserve`` is atomic (admit or deny, never
   overdraw) and an invariant check keeps total usage within budget.
+* **Shared-TM packing** (``Cluster(..., tm_spec=...)``): instead of scalar
+  footprints, tenants reserve tenant-tagged task lists that the cluster
+  packs into ONE TaskManager fleet (``repro.core.placement.shared_pack``).
+  Each TM's ``base_mb`` is amortized across its co-resident tenants, so N
+  co-located queries pay ~1 fleet's heap/network share instead of N — the
+  resource-efficiency headline private fleets hide.  Every accepted
+  re-reservation is priced as a repack (``MigrationCost``: tasks moved ×
+  state MB).
 * :func:`run_colocated` steps N ``(policy, query, profile)`` episodes in
   lockstep, one decision window at a time.  Each episode's scale-up request
   hits the cluster through the controller's admission hook; denied requests
@@ -17,13 +25,19 @@ every episode owns an unbounded cluster.  This module makes it measurable:
   all packages would keep blocked.
 
 Admission arbitration (who gets first claim on the remaining budget each
-window) supports three orders:
+window) supports four orders:
 
 * ``"priority"``   — the spec list is the priority order, every window;
 * ``"fair_share"`` — episodes using the smallest fraction of the budget go
   first (max of CPU share and memory share, ascending);
 * ``"first_come"`` — episodes with the oldest unserved (denied) request go
   first; ties fall back to spec order.
+* ``"preemption"`` — priority order, plus the §4.3 re-shape mechanism:
+  when a request is denied, the arbiter forces *lower-priority* tenants to
+  give back one storage level at a time (``AutoScaler.shrink_memory``,
+  built on the policy protocol's ``propose_shrink``) until the request
+  fits or nothing below the requester can shrink.  Give-backs are recorded
+  per window in ``TenantRun.preemptions`` alongside ``denials``.
 """
 from __future__ import annotations
 
@@ -31,6 +45,8 @@ from dataclasses import dataclass, field
 
 from repro.core.controller import AutoScaler, ControllerConfig
 from repro.core.justin import JustinParams
+from repro.core.placement import (MigrationCost, SharedPlacement,
+                                  TaskRequest, TMSpec, repack, shared_pack)
 from repro.core.policy import make_policy
 from repro.data.nexmark import QUERIES, TARGET_RATES
 from repro.scenarios.faults import FaultSchedule
@@ -39,7 +55,7 @@ from repro.scenarios.profiles import Profile, make_profile
 from repro.scenarios.runner import scenario_horizon_s
 from repro.streaming.engine import StreamEngine
 
-ADMISSION_POLICIES = ("priority", "fair_share", "first_come")
+ADMISSION_POLICIES = ("priority", "fair_share", "first_come", "preemption")
 
 
 @dataclass
@@ -50,13 +66,27 @@ class Cluster:
     tenant's current placement (not deltas), so a reservation is simply
     "replace my footprint with this one" — admitted iff the cluster-wide
     totals stay within budget.
-    """
+
+    With ``tm_spec`` set the cluster runs in **shared-TM mode**: tenants
+    reserve task lists (:meth:`reserve_tasks`) that are bin-packed into
+    one fleet, and ``used_cpu`` / ``used_mem`` hold each tenant's
+    *amortized attribution* (own slots + managed grants + its
+    slot-proportional share of co-resident TMs' ``base_mb``), which sums
+    exactly to the fleet totals."""
     cpu_slots: int
     memory_mb: float
     used_cpu: dict[str, int] = field(default_factory=dict)
     used_mem: dict[str, float] = field(default_factory=dict)
+    tm_spec: TMSpec | None = None
+    tasks: dict[str, list[TaskRequest]] = field(default_factory=dict)
+    migrations: list[MigrationCost] = field(default_factory=list)
+    _placement: SharedPlacement | None = field(default=None, repr=False)
 
     # ------------------------------------------------------------- accounting
+    @property
+    def shared(self) -> bool:
+        return self.tm_spec is not None
+
     @property
     def cpu_in_use(self) -> int:
         return sum(self.used_cpu.values())
@@ -78,6 +108,9 @@ class Cluster:
     def reserve(self, tenant: str, cpu: int, mem: float) -> bool:
         """Atomically replace ``tenant``'s footprint; False if it would
         overdraw the budget (nothing changes on denial)."""
+        if self.shared:
+            raise TypeError("shared-TM cluster: reserve task lists via "
+                            "reserve_tasks, not scalar footprints")
         if not self.fits(tenant, cpu, mem):
             return False
         self.used_cpu[tenant] = cpu
@@ -86,9 +119,57 @@ class Cluster:
             and self.mem_in_use <= self.memory_mb + 1e-9, "budget overdrawn"
         return True
 
+    # ------------------------------------------------------ shared-TM packing
+    def placement(self) -> SharedPlacement | None:
+        """The current fleet (shared-TM mode), None before any reservation."""
+        return self._placement
+
+    def migration_total(self) -> MigrationCost:
+        """Cumulative repack cost across accepted reservations."""
+        return sum(self.migrations, MigrationCost())
+
+    def _trial(self, tenant: str,
+               reqs: list[TaskRequest]) -> dict[str, list[TaskRequest]]:
+        trial = dict(self.tasks)
+        trial[tenant] = list(reqs)
+        return trial
+
+    def quote(self, tenant: str, reqs: list[TaskRequest]) -> tuple[int, float]:
+        """(cpu slots, amortized memory MB) ``tenant`` would be attributed
+        if its task list became ``reqs`` — the admission hook's
+        pre-enactment quote against the shared placement."""
+        pl = shared_pack(self._trial(tenant, reqs), self.tm_spec)
+        return pl.tenant_cpu(tenant), pl.tenant_memory_mb(tenant)
+
+    def reserve_tasks(self, tenant: str, reqs: list[TaskRequest]) -> bool:
+        """Atomically replace ``tenant``'s task list and repack the whole
+        fleet; False if the packed totals would overdraw the budget
+        (nothing changes on denial).  Accepted reservations append their
+        :class:`MigrationCost` to ``migrations``."""
+        pl, cost = repack(self._trial(tenant, reqs), self.tm_spec,
+                          self._placement)
+        if pl.cpu_cores > self.cpu_slots \
+                or pl.memory_mb > self.memory_mb + 1e-9:
+            return False
+        self.tasks[tenant] = list(reqs)
+        self.migrations.append(cost)
+        self._commit_placement(pl)
+        return True
+
+    def _commit_placement(self, pl: SharedPlacement) -> None:
+        self._placement = pl
+        att = pl.attribution()
+        self.used_cpu = {t: att.get(t, (0, 0.0))[0] for t in self.tasks}
+        self.used_mem = {t: att.get(t, (0, 0.0))[1] for t in self.tasks}
+        assert self.cpu_in_use <= self.cpu_slots \
+            and self.mem_in_use <= self.memory_mb + 1e-9, "budget overdrawn"
+
     def release(self, tenant: str) -> None:
         self.used_cpu.pop(tenant, None)
         self.used_mem.pop(tenant, None)
+        if self.shared and tenant in self.tasks:
+            del self.tasks[tenant]
+            self._commit_placement(shared_pack(self.tasks, self.tm_spec))
 
     def share(self, tenant: str) -> float:
         """Tenant's budget share: max of its CPU and memory fractions —
@@ -107,13 +188,17 @@ class ColocatedSpec:
     defaults to ``{policy}:{query}`` (suffixed for uniqueness by the
     driver).  ``profile`` may be a Profile, a named shape ("ramp", ...) or
     None for the paper's fixed-target protocol; ``target`` overrides the
-    query's default target rate."""
+    query's default target rate.  ``config`` is an optional initial
+    configuration override (partial ``{op: (parallelism, level)}``),
+    enacted before the first window — e.g. a static tenant pinned at a
+    raised storage level, the preemption scenarios' victim."""
     policy: str
     query: str
     profile: Profile | str | None = None
     name: str | None = None
     target: float | None = None
     faults: FaultSchedule | list | None = None
+    config: dict | None = None
 
 
 @dataclass
@@ -124,7 +209,12 @@ class TenantRun:
     scaler: AutoScaler
     profile: Profile | None
     faults: FaultSchedule | None
-    denials: list[int] = field(default_factory=list)   # window indices
+    denials: list[int] = field(default_factory=list)     # window indices
+    preemptions: list[int] = field(default_factory=list)  # windows with >= 1
+                                                          # forced give-back
+                                                          # (the give-back
+                                                          # COUNT lives in
+                                                          # scaler.preemptions)
     faults_fired: list = field(default_factory=list)
     first_pending: int | None = None   # window of oldest unserved request
 
@@ -151,24 +241,31 @@ class ColocatedResult:
         raise KeyError(name)
 
     def summary(self, slack: float = 0.97) -> dict:
-        return {
+        out = {
             "admission": self.admission,
             "cluster": {"cpu_slots": self.cluster.cpu_slots,
-                        "memory_mb": self.cluster.memory_mb},
+                        "memory_mb": self.cluster.memory_mb,
+                        "shared_tm": self.cluster.shared},
             "peak_cpu": max((c for c, _ in self.usage), default=0),
             "peak_mem": max((m for _, m in self.usage), default=0.0),
             "tenants": {t.name: {
                 "policy": t.spec.policy, "query": t.spec.query,
                 "steps": t.scaler.steps,
                 "denied_windows": list(t.denials),
+                "preempted_windows": list(t.preemptions),
                 "slo": t.slo(slack).to_dict(),
             } for t in self.tenants},
         }
+        if self.cluster.shared:
+            mig = self.cluster.migration_total()
+            out["migration"] = {"tasks_moved": mig.tasks_moved,
+                                "state_mb": mig.state_mb}
+        return out
 
 
 def _arbitration_order(tenants: list[TenantRun], cluster: Cluster,
                        admission: str) -> list[TenantRun]:
-    if admission == "priority":
+    if admission in ("priority", "preemption"):
         return list(tenants)
     if admission == "fair_share":
         return sorted(tenants, key=lambda t: cluster.share(t.name))
@@ -195,16 +292,30 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
     just ds2/justin).  Episodes whose *initial* placement already exceeds
     the budget raise — a cluster that cannot hold the starting
     configurations is a sizing error, not an admission decision.
+
+    With ``admission="preemption"`` the spec list is the priority order
+    and a denied request may be satisfied by forcing lower-priority
+    tenants' storage levels down (see module docstring).  On a shared-TM
+    cluster, footprints are task lists packed into one fleet and history
+    rows carry each tenant's amortized attribution (``amortized_mb``).
     """
+    if admission not in ADMISSION_POLICIES:
+        raise ValueError(f"unknown admission policy {admission!r} "
+                         f"(have: {', '.join(ADMISSION_POLICIES)})")
     specs = [s if isinstance(s, ColocatedSpec) else ColocatedSpec(*s)
              for s in specs]
     base = cfg or ControllerConfig(justin=JustinParams(max_level=max_level))
     tenants: list[TenantRun] = []
     names: set[str] = set()
-    for i, spec in enumerate(specs):
-        name = spec.name or f"{spec.policy}:{spec.query}"
+    for spec in specs:
+        # deterministic unique names: always suffix the ORIGINAL base name
+        # (compounding the suffixed name produced a#2#2... on repeated
+        # collisions)
+        base_name = spec.name or f"{spec.policy}:{spec.query}"
+        name, k = base_name, 2
         while name in names:
-            name = f"{name}#{i}"
+            name = f"{base_name}#{k}"
+            k += 1
         names.add(name)
         target = spec.target if spec.target is not None \
             else TARGET_RATES[spec.query]
@@ -216,15 +327,41 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
         if isinstance(faults, (list, tuple)):
             faults = FaultSchedule(list(faults))
         engine = StreamEngine(QUERIES[spec.query](), seed=seed, warm=warm)
+        if spec.config:
+            engine.reconfigure(spec.config)
         scaler = AutoScaler(engine, profile(0.0) if profile else target,
                             base, policy=make_policy(spec.policy, base))
+        scaler.tenant = name
+        scaler.cluster = cluster
         tenants.append(TenantRun(spec=spec, name=name, scaler=scaler,
                                  profile=profile, faults=faults))
 
+    prio = {t.name: i for i, t in enumerate(tenants)}
+
+    def _reserve(t: TenantRun, config: dict | None = None,
+                 cpu: int | None = None, mem: float | None = None) -> bool:
+        """Replace ``t``'s cluster footprint: its task list under ``config``
+        (shared-TM mode) or the scalar (cpu, mem) quote."""
+        if cluster.shared:
+            return cluster.reserve_tasks(t.name,
+                                         t.scaler.task_requests(config))
+        if cpu is None:
+            cpu, mem = t.scaler.resources()
+        return cluster.reserve(t.name, cpu, mem)
+
+    def _footprint_shrank(t: TenantRun) -> bool:
+        """Is ``t``'s current task list no larger (slots and managed MB)
+        than the one the cluster holds for it?"""
+        old = cluster.tasks.get(t.name, [])
+        new = t.scaler.task_requests()
+        return (len(new) <= len(old)
+                and sum(r.memory_mb for r in new)
+                <= sum(r.memory_mb for r in old) + 1e-9)
+
     # initial placements must fit — this is cluster sizing, not admission
     for t in tenants:
-        cpu0, mem0 = t.scaler.resources()
-        if not cluster.reserve(t.name, cpu0, mem0):
+        if not _reserve(t):
+            cpu0, mem0 = t.scaler.resources()
             raise ValueError(
                 f"cluster {cluster.cpu_slots} slots/{cluster.memory_mb} MB "
                 f"cannot hold {t.name}'s initial placement "
@@ -233,14 +370,59 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
     result = ColocatedResult(cluster=cluster, tenants=tenants,
                              admission=admission)
 
+    def _preempt_for(requester: TenantRun, new_config: dict, cpu, mem,
+                     w: int) -> bool:
+        """Force lower-priority tenants' storage levels down, least
+        important first, until the requester's reservation fits.  Returns
+        admission success; every give-back is recorded on the victim."""
+        victims = [v for v in tenants
+                   if prio[v.name] > prio[requester.name]]
+        for victim in reversed(victims):
+            while True:
+                sc = victim.scaler
+                prop = sc.policy.propose_shrink(sc.flow, sc.cfg)
+                if prop is None or prop.config == sc.flow.config():
+                    break               # nothing left to give back
+                # FFD packing is non-monotone (see tests/test_placement.py
+                # ::test_ffd_packing_is_non_monotone): a shrunk task list
+                # can pack into a LARGER fleet.  Quote the give-back
+                # BEFORE enacting it and skip this victim when shrinking
+                # would not actually free budget.
+                if cluster.shared:
+                    if not cluster.reserve_tasks(
+                            victim.name, sc.task_requests(prop.config)):
+                        break
+                elif not cluster.fits(victim.name,
+                                      *sc.resources(prop.config)):
+                    break
+                shrunk = sc.shrink_memory()
+                assert shrunk is not None   # prop said there was a level
+                if not victim.preemptions or victim.preemptions[-1] != w:
+                    victim.preemptions.append(w)
+                if not cluster.shared:
+                    freed = cluster.reserve(victim.name, *shrunk)
+                    assert freed            # same quote fits() passed above
+                if _reserve(requester, new_config, cpu, mem):
+                    return True
+        return False
+
     for w in range(windows):
+        # the attribution backing the configs that RUN during this window
+        # is the one reservations left behind at the previous boundary —
+        # matching HistoryRow.memory_mb, which quotes the pre-reconfig
+        # config (on preempted windows the victim's mid-window shrink
+        # makes its row slightly conservative: it held the pre-shrink
+        # grants when the window began)
+        att_start = dict(cluster.used_mem)
         for t in _arbitration_order(tenants, cluster, admission):
-            def admit(scaler, new_config, cpu, mem, _t=t):
-                ok = cluster.reserve(_t.name, cpu, mem)
+            def admit(scaler, new_config, cpu, mem, _t=t, _w=w):
+                ok = _reserve(_t, new_config, cpu, mem)
+                if not ok and admission == "preemption":
+                    ok = _preempt_for(_t, new_config, cpu, mem, _w)
                 if not ok:
-                    _t.denials.append(w)
+                    _t.denials.append(_w)
                     if _t.first_pending is None:
-                        _t.first_pending = w
+                        _t.first_pending = _w
                 return ok
 
             def hook(eng, _w, _t=t):
@@ -253,10 +435,36 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
                                  window_hook=hook)
             # sync the enacted footprint (scale-downs release capacity;
             # admitted scale-ups were already reserved at the quoted size,
-            # re-reserving the enacted placement keeps them in lockstep)
+            # re-reserving the enacted placement keeps them in lockstep).
+            # A failed resync of a footprint that GREW means per-tenant
+            # accounting has desynced from reality (the enacted placement
+            # differs from the quoted one and no longer fits) — a driver
+            # invariant violation, never a legitimate denial, so fail
+            # loudly.
             cpu_now, mem_now = t.scaler.resources()
-            cluster.reserve(t.name, cpu_now, mem_now)
+            if not _reserve(t, None, cpu_now, mem_now) \
+                    and not (cluster.shared and _footprint_shrank(t)):
+                # (a shared-TM resync of a footprint that SHRANK may be
+                # denied by FFD non-monotonicity — a smaller task list
+                # repacking into a larger fleet; the previous, larger
+                # reservation stays standing, which never under-states
+                # the tenant and is corrected at its next successful
+                # reservation)
+                raise RuntimeError(
+                    f"cluster accounting desync: {t.name}'s enacted "
+                    f"placement ({cpu_now} slots, {mem_now:.0f} MB) does "
+                    f"not fit the budget its quoted admission passed "
+                    f"({cluster.cpu_slots} slots, "
+                    f"{cluster.memory_mb:.0f} MB, "
+                    f"{cluster.cpu_in_use - cluster.used_cpu.get(t.name, 0)}"
+                    f" slots/"
+                    f"{cluster.mem_in_use - cluster.used_mem.get(t.name, 0.0):.0f}"
+                    f" MB held by neighbors)")
             if not t.history[-1].denied:
                 t.first_pending = None
+        for t in tenants:
+            row = t.history[-1]
+            row.amortized_mb = att_start.get(t.name)
+            row.preempted = w in t.preemptions
         result.usage.append((cluster.cpu_in_use, cluster.mem_in_use))
     return result

@@ -13,6 +13,14 @@ writes feeds ``benchmarks/render_experiments.py`` (tables + per-query
 plots), and :func:`grid_markdown` renders the same data as README-ready
 tables: one all-policies cell table plus the ds2-vs-justin savings
 comparison when both are present.
+
+``--grid --admission <mode>`` adds a **co-location section**
+(:func:`run_colocation`): per query, the ds2/justin pair competing on one
+shared-TM cluster under the chosen admission mode.  Its savings table
+carries the admission-aware-placement axes — per-tenant amortized-memory
+integrals (base_mb amortized across co-resident TMs), a preemption column
+(forced give-backs suffered), and the shared-fleet vs
+sum-of-private-fleets memory saving.
 """
 from __future__ import annotations
 
@@ -26,12 +34,89 @@ PROFILES = ("constant", "ramp", "spike", "diurnal", "sinusoid", "step")
 BASELINE, CONTENDER = "ds2", "justin"
 
 
+def run_colocation(queries=None, admission: str = "preemption", *,
+                   windows: int = 5, seed: int = 3, max_level: int = 2,
+                   cpu_slots: int = 0, memory_mb: float = 0.0,
+                   slack: float = DEFAULT_SLACK,
+                   verbose: bool = True) -> list[dict]:
+    """Per query: the ds2/justin pair competing on ONE shared-TM cluster
+    under ``admission`` (ds2 is the higher-priority tenant, so under
+    ``"preemption"`` its denied scale-outs may reclaim the justin
+    neighbor's storage levels).  ``cpu_slots``/``memory_mb`` of 0 auto-size
+    the budget from the pair's initial placements (2x the slots, 1.5x the
+    memory — room to grow, but contended).  Returns one cell per query
+    with per-tenant SLO scorecards (incl. amortized-MB integrals and
+    preemption counts) plus the shared-vs-private memory saving."""
+    from repro.core.controller import ControllerConfig
+    from repro.core.justin import JustinParams
+    from repro.core.placement import default_tm_spec, placement_for_config
+    from repro.core.policy import make_policy
+    from repro.scenarios.cluster import (Cluster, ColocatedSpec,
+                                         run_colocated)
+    queries = list(queries or QUERIES)
+    cells = []
+    for qname in queries:
+        cfg = ControllerConfig(justin=JustinParams(max_level=max_level))
+        specs = [ColocatedSpec(BASELINE, qname, name="hi"),
+                 ColocatedSpec(CONTENDER, qname, name="lo")]
+        # auto-size from the pair's initial private footprints — straight
+        # placement quotes over the query's starting config, no engines
+        flow = QUERIES[qname]()
+        cpu0, mem0 = 0, 0.0
+        for pol in (BASELINE, CONTENDER):
+            quote = placement_for_config(
+                make_policy(pol, cfg).resources_config(flow.config()),
+                base_mem_mb=cfg.base_mem_mb,
+                exclude=set(flow.sources()))
+            cpu0 += quote.cpu_cores
+            mem0 += quote.memory_mb
+        slots = cpu_slots or 2 * cpu0
+        mem = memory_mb or 1.5 * mem0
+        cluster = Cluster(slots, mem,
+                          tm_spec=default_tm_spec(cfg.base_mem_mb))
+        res = run_colocated(specs, cluster, windows=windows, seed=seed,
+                            admission=admission, cfg=cfg)
+        # both integrals quote the config running during each window:
+        # private fleets vs the tenant's amortized shared-TM attribution
+        shared_mb_w = sum(t.slo(slack).amortized_mb_windows
+                          for t in res.tenants)
+        private_mb_w = sum(t.slo(slack).mb_windows for t in res.tenants)
+        cell = {"query": qname, "admission": admission,
+                "cluster": {"cpu_slots": slots, "memory_mb": mem,
+                            "shared_tm": True},
+                "tenants": {t.name: {
+                    "policy": t.spec.policy,
+                    "denied": len(t.denials),
+                    "preempted": len(t.preemptions),
+                    "slo": t.slo(slack).to_dict()} for t in res.tenants},
+                "shared_mb_windows": shared_mb_w,
+                "private_mb_windows": private_mb_w,
+                "shared_mem_saving": 1 - shared_mb_w
+                / max(private_mb_w, 1e-9)}
+        mig = cluster.migration_total()
+        cell["migration"] = {"tasks_moved": mig.tasks_moved,
+                             "state_mb": mig.state_mb}
+        cells.append(cell)
+        if verbose:
+            ten = cell["tenants"]
+            print(f"{qname:4s} colocated {admission:10s} "
+                  f"denied={[ten[n]['denied'] for n in ten]} "
+                  f"preempted={[ten[n]['preempted'] for n in ten]} "
+                  f"shared_saving={cell['shared_mem_saving']:.0%}",
+                  flush=True)
+    return cells
+
+
 def run_grid(queries=None, profiles=None, policies=None, *,
              windows: int = 8, seed: int = 3, max_level: int = 2,
-             slack: float = DEFAULT_SLACK, verbose: bool = True) -> dict:
+             slack: float = DEFAULT_SLACK, verbose: bool = True,
+             admission: str | None = None, windows_colocated: int = 5,
+             cluster_slots: int = 0, cluster_mb: float = 0.0) -> dict:
     """Run the full grid; returns ``{"cells": [...], "meta": {...}}`` where
     each cell is one (policy, query, profile) episode's summary + SLO
-    scorecard.  ``policies`` defaults to every registered policy."""
+    scorecard.  ``policies`` defaults to every registered policy.  With
+    ``admission`` set, a ``"colocation"`` section is added (see
+    :func:`run_colocation`)."""
     queries = list(queries or QUERIES)
     profiles = list(profiles or PROFILES)
     policies = list(policies or available_policies())
@@ -55,10 +140,17 @@ def run_grid(queries=None, profiles=None, policies=None, *,
                           f"catchup={'-' if cu is None else f'{cu:.0f}s'} "
                           f"cpu_w={rep.cpu_slot_windows} "
                           f"mb_w={rep.mb_windows:,.0f}", flush=True)
-    return {"cells": cells,
-            "meta": {"queries": queries, "profiles": profiles,
-                     "policies": list(policies), "windows": windows,
-                     "seed": seed, "max_level": max_level, "slack": slack}}
+    out = {"cells": cells,
+           "meta": {"queries": queries, "profiles": profiles,
+                    "policies": list(policies), "windows": windows,
+                    "seed": seed, "max_level": max_level, "slack": slack,
+                    "admission": admission}}
+    if admission is not None:
+        out["colocation"] = run_colocation(
+            queries, admission, windows=windows_colocated, seed=seed,
+            max_level=max_level, cpu_slots=cluster_slots,
+            memory_mb=cluster_mb, slack=slack, verbose=verbose)
+    return out
 
 
 def grid_cell(grid: dict, policy: str, query: str, profile: str) -> dict | None:
@@ -121,10 +213,31 @@ def cells_markdown(grid: dict) -> str:
     return "\n".join(out)
 
 
+def colocation_markdown(cells: list[dict]) -> str:
+    """The co-location savings table: per tenant the denials/preemptions
+    and both memory integrals (private quote vs amortized shared-TM
+    attribution), per cell the shared-fleet saving over private fleets."""
+    out = ["| query | admission | tenant | policy | denied | preempted | "
+           "recovered | MB-w private | MB-w amortized | shared saving |",
+           "|" + "---|" * 10]
+    for c in cells:
+        for name, t in c["tenants"].items():
+            s = t["slo"]
+            out.append(
+                f"| {c['query']} | {c['admission']} | {name} "
+                f"| {t['policy']} | {t['denied']} | {t['preempted']} "
+                f"| {s['recovered']} | {s['mb_windows']:,.0f} "
+                f"| {s['amortized_mb_windows']:,.0f} "
+                f"| {c['shared_mem_saving']:.0%} |")
+    return "\n".join(out)
+
+
 def grid_markdown(grid: dict) -> str:
     """Render the grid as GitHub-flavored markdown: the all-policies cell
     table, plus the ds2-vs-justin savings comparison when both ran."""
     parts = [cells_markdown(grid)]
+    if grid.get("colocation"):
+        parts.append(colocation_markdown(grid["colocation"]))
     rows = comparison_rows(grid)
     if rows:
         head = ("| query | profile | steps d/j | SLO viol d/j | "

@@ -14,7 +14,12 @@ policies on:
   user-visible latency proxy;
 * **resource-time integrals** — CPU-slot-windows and MB-windows, the
   "total cluster resources spent" axis on which Justin's hybrid scaling
-  claims to beat DS2's CPU-only packages.
+  claims to beat DS2's CPU-only packages; on shared-TM clusters the
+  amortized-MB integral prices each window at the tenant's attribution
+  (base_mb split across co-residents) instead of a private fleet's quote;
+* **admission outcomes** — denied windows (requests the cluster rejected)
+  and preempted windows (forced memory give-backs suffered under
+  ``admission="preemption"``).
 
 Everything is computed from plain ``HistoryRow`` lists, so the same
 functions serve single-episode scenarios, co-located cluster runs, and the
@@ -127,6 +132,17 @@ def resource_integrals(history: list) -> tuple[int, float]:
             sum(h.memory_mb for h in history))
 
 
+def amortized_mb_windows(history: list) -> float:
+    """Amortized-MB-windows: the memory integral under shared-TM
+    attribution (each window's ``amortized_mb`` — the tenant's managed
+    grants plus its slot-proportional share of co-resident TMs' base
+    memory).  Falls back to the private ``memory_mb`` for windows without
+    an attribution (single-tenant histories, scalar-footprint clusters),
+    so private and shared runs stay directly comparable."""
+    return sum(h.memory_mb if getattr(h, "amortized_mb", None) is None
+               else h.amortized_mb for h in history)
+
+
 @dataclass(frozen=True)
 class SLOReport:
     """Per-episode SLO scorecard; ``slo_report`` builds it."""
@@ -138,7 +154,10 @@ class SLOReport:
     p95_backlog: float
     cpu_slot_windows: int
     mb_windows: float
+    amortized_mb_windows: float      # shared-TM attribution integral
+                                     # (== mb_windows on private placements)
     denied_windows: int              # admission rejections (co-location)
+    preempted_windows: int           # forced memory give-backs suffered
     slack: float
 
     def to_dict(self) -> dict:
@@ -163,5 +182,8 @@ def slo_report(history: list, slack: float = DEFAULT_SLACK,
         p95_backlog=p95_backlog(history),
         cpu_slot_windows=cpu_w,
         mb_windows=mb_w,
+        amortized_mb_windows=amortized_mb_windows(history),
         denied_windows=sum(1 for h in history if h.denied),
+        preempted_windows=sum(1 for h in history
+                              if getattr(h, "preempted", False)),
         slack=slack)

@@ -209,16 +209,18 @@ class LSMStore:
     def items(self) -> tuple[np.ndarray, np.ndarray]:
         """All live (key, value) pairs — used for state re-partitioning.
 
-        Equivalent to unique(concat([write log] + levels)) keeping the first
-        occurrence (the memtable log wins over levels, and — preserving the
-        seed's resolution — the OLDEST write wins among duplicates within
-        the log itself; see ROADMAP open items), but built from sorted
-        2-way merges instead of one big sort."""
+        The memtable wins over levels, and the NEWEST write wins among
+        duplicates within the memtable log — exactly what ``get_batch``
+        returns, so a mid-memtable snapshot (re-partitioning, warm-state
+        install) carries the same values a read would see.  (The seed
+        resolved in-log duplicates to the OLDEST write, leaving snapshots
+        stale for hot keys; fixed here, goldens regenerated — see
+        docs/golden-traces.md.)  Built from the maintained sorted
+        newest-wins view + sorted 2-way merges instead of one big sort."""
         acc = None
         if self.mem_n:
-            lk = self.mem_keys[:self.mem_n]
-            lu, li = np.unique(lk, return_index=True)
-            acc = (lu, self.mem_vals[:self.mem_n][li])
+            vk, vv = self._view_merged()
+            acc = (vk, vv)
         for k, v in self.levels:
             if not len(k):
                 continue
@@ -227,6 +229,10 @@ class LSMStore:
         if acc is None:
             return (np.empty(0, np.int64),
                     np.empty((0, self.value_words), np.int32))
+        if acc[0] is self._view_keys:
+            # mem-only result: don't alias the live view, which the write
+            # path mutates in place (snapshots must stay frozen)
+            return acc[0].copy(), acc[1].copy()
         return acc
 
     # ------------------------------------------------------------- write path

@@ -9,8 +9,9 @@ hold no managed memory and its give-backs free shared capacity.
 """
 import pytest
 
-from repro.core.controller import ControllerConfig
+from repro.core.controller import AutoScaler, ControllerConfig
 from repro.core.justin import JustinParams
+from repro.core.placement import TMSpec, default_tm_spec
 from repro.scenarios import Cluster, ColocatedSpec, run_colocated
 from repro.scenarios.cluster import _arbitration_order
 
@@ -140,8 +141,144 @@ def test_colocated_summary_shape():
     res = run_pair("justin", windows=3)
     s = res.summary()
     assert set(s["tenants"]) == {"A", "B"}
-    assert s["cluster"] == {"cpu_slots": 16, "memory_mb": 7000.0}
+    assert s["cluster"] == {"cpu_slots": 16, "memory_mb": 7000.0,
+                            "shared_tm": False}
     assert s["peak_cpu"] <= 16 and s["peak_mem"] <= 7000.0
     for t in s["tenants"].values():
         assert {"policy", "query", "steps", "denied_windows",
-                "slo"} <= set(t)
+                "preempted_windows", "slo"} <= set(t)
+
+
+# ------------------------------------------------- regression: bugfixes
+def test_unique_names_never_compound_suffixes():
+    """Three identical (policy, query) specs get deterministic unique
+    names; repeated collisions must not compound (a#2#2...)."""
+    res = run_colocated([("ds2", "q1")] * 3,
+                        Cluster(cpu_slots=24, memory_mb=20000.0),
+                        windows=0, cfg=quick_cfg())
+    assert [t.name for t in res.tenants] \
+        == ["ds2:q1", "ds2:q1#2", "ds2:q1#3"]
+    # explicit names that collide with an already-suffixed name
+    res = run_colocated(
+        [ColocatedSpec("ds2", "q1", name="x"),
+         ColocatedSpec("ds2", "q1", name="x#2"),
+         ColocatedSpec("ds2", "q1", name="x")],
+        Cluster(cpu_slots=24, memory_mb=20000.0), windows=0,
+        cfg=quick_cfg())
+    assert [t.name for t in res.tenants] == ["x", "x#2", "x#3"]
+
+
+def test_resync_desync_fails_loudly(monkeypatch):
+    """A post-step footprint that no longer fits the budget means the
+    quoted admission and the enacted placement disagree — the driver must
+    raise, not silently desync per-tenant accounting from reality."""
+    orig = AutoScaler.step_window
+
+    def sabotaged(self, w=0, **kw):
+        out = orig(self, w, **kw)
+        if self.tenant == "B":
+            # grow the enacted footprint behind the arbiter's back
+            self.engine.reconfigure({"currency_map": (12, 0)})
+        return out
+
+    monkeypatch.setattr(AutoScaler, "step_window", sabotaged)
+    with pytest.raises(RuntimeError, match="accounting desync"):
+        run_colocated([ColocatedSpec("ds2", "q1", name="A"),
+                       ColocatedSpec("ds2", "q1", name="B")],
+                      Cluster(cpu_slots=8, memory_mb=4000.0),
+                      windows=1, cfg=quick_cfg())
+
+
+def test_run_max_windows_zero_runs_zero_windows():
+    """``max_windows=0`` must mean zero windows, not the falsy-default
+    budget of ``max_reconfigs + 4``."""
+    from repro.data.nexmark import QUERIES, TARGET_RATES
+    from repro.streaming.engine import StreamEngine
+    scaler = AutoScaler(StreamEngine(QUERIES["q1"](), seed=3),
+                        TARGET_RATES["q1"], quick_cfg())
+    assert scaler.run(max_windows=0) == []
+    assert scaler.history == [] and scaler.engine.now == 0.0
+
+
+# ------------------------------------------------- shared-TM + preemption
+def test_shared_cluster_reserve_tasks_and_release():
+    from repro.core.placement import TaskRequest
+    spec = TMSpec(slots=4, managed_pool_mb=640.0, base_mb=1000.0)
+    c = Cluster(cpu_slots=8, memory_mb=3000.0, tm_spec=spec)
+    with pytest.raises(TypeError):
+        c.reserve("a", 1, 100.0)      # scalar reserve is the wrong API
+    a = [TaskRequest("op", i, 158.0) for i in range(2)]
+    b = [TaskRequest("op", i, 158.0) for i in range(2)]
+    assert c.reserve_tasks("a", a) and c.reserve_tasks("b", b)
+    # both tenants co-reside on one TM: each pays half its base_mb
+    assert c.placement().n_tms == 1
+    assert c.used_mem["a"] == pytest.approx(2 * 158.0 + 500.0)
+    assert c.mem_in_use == pytest.approx(c.placement().memory_mb)
+    # denial leaves accounting untouched
+    big = [TaskRequest("op", i, 158.0) for i in range(9)]   # > 8 slots
+    before = (dict(c.used_cpu), dict(c.used_mem))
+    assert not c.reserve_tasks("b", big)
+    assert (c.used_cpu, c.used_mem) == before
+    c.release("b")
+    assert "b" not in c.used_mem
+    assert c.used_mem["a"] == pytest.approx(2 * 158.0 + 1000.0)
+
+
+def test_shared_tm_strictly_cheaper_than_private_fleets():
+    """Three small tenants packed on one shared fleet pay two TMs' base
+    memory instead of three — total strictly below the sum of the
+    equivalent private per-tenant placements (the cap on CPU slots keeps
+    every tenant at its initial 2-slot placement)."""
+    cluster = Cluster(cpu_slots=6, memory_mb=20000.0,
+                      tm_spec=default_tm_spec())
+    res = run_colocated([("ds2", "q1")] * 3, cluster, windows=2,
+                        cfg=quick_cfg())
+    shared_total = cluster.placement().memory_mb
+    private_sum = sum(t.scaler.resources()[1] for t in res.tenants)
+    assert shared_total < private_sum
+    # attribution sums exactly to the fleet totals and is what the
+    # history rows carry
+    assert cluster.mem_in_use == pytest.approx(shared_total)
+    for t in res.tenants:
+        assert t.history[-1].amortized_mb \
+            == pytest.approx(cluster.used_mem[t.name])
+        assert t.history[-1].amortized_mb <= t.scaler.resources()[1]
+    # the two co-resident tenants pay strictly less than a private fleet
+    # (the third happens to sit alone on its TM and pays in full)
+    assert sum(t.history[-1].amortized_mb < t.scaler.resources()[1]
+               for t in res.tenants) >= 2
+
+
+def preemption_pair(admission: str, windows: int = 5):
+    """The pinned §4.3 scenario: a static low-priority tenant pinned at
+    storage level 2 holds the memory a high-priority DS2 tenant needs."""
+    specs = [ColocatedSpec("ds2", "q1", name="H"),
+             ColocatedSpec("static", "q11", name="V", target=5_000,
+                           config={"user_sessions": (6, 2)})]
+    return run_colocated(specs, Cluster(cpu_slots=16, memory_mb=8500.0),
+                         windows=windows, cfg=quick_cfg(),
+                         admission=admission)
+
+
+def test_preemption_admits_what_priority_starves():
+    """Acceptance headline: on the same budget, ``priority`` leaves the
+    high-priority tenant denied every window; ``preemption`` forces the
+    neighbor's storage level down (2 -> 1 -> 0) and the tenant recovers."""
+    starved = preemption_pair("priority")
+    h = starved.tenant("H")
+    assert h.denials == list(range(len(h.history)))   # every window
+    assert not h.slo().recovered
+    assert starved.tenant("V").preemptions == []
+
+    freed = preemption_pair("preemption")
+    h2, v2 = freed.tenant("H"), freed.tenant("V")
+    assert h2.denials == []
+    assert h2.slo().recovered
+    assert v2.preemptions == [0, 1]                   # two give-backs
+    assert v2.scaler.flow.nodes["user_sessions"].memory_level == 0
+    assert v2.scaler.preemptions == 2
+    assert v2.slo().preempted_windows == 2
+    assert [x.preempted for x in v2.history[:2]] == [True, True]
+    # the admitted tenant actually got the capacity it was starved of
+    assert h2.history[-1].cpu_cores > h.history[-1].cpu_cores
+    assert freed.summary()["tenants"]["V"]["preempted_windows"] == [0, 1]

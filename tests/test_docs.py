@@ -36,7 +36,8 @@ def test_policies_doc_covers_registry_surface():
     text = (REPO / "docs" / "policies.md").read_text()
     for needle in ("register_policy", "make_policy", "available_policies",
                    "propose", "commit", "resources_config",
-                   "should_trigger", "Proposal",
+                   "should_trigger", "propose_shrink", "shrink_memory",
+                   "Proposal",
                    "ds2", "justin", "static", "threshold",
                    "--policy threshold"):
         assert needle in text, needle
@@ -45,13 +46,15 @@ def test_policies_doc_covers_registry_surface():
 def test_architecture_covers_required_topics():
     text = (REPO / "docs" / "architecture.md").read_text().lower()
     for topic in ("decision window", "sim_time_scale", "admission",
-                  "cluster", "bin-packing"):
+                  "cluster", "bin-packing", "shared-tm placement",
+                  "preemption", "amortized", "migration"):
         assert topic in text, topic
 
 
 def test_golden_traces_doc_pins_the_quirks():
     text = (REPO / "docs" / "golden-traces.md").read_text().lower()
-    assert "oldest" in text and "items()" in text     # memtable quirk
+    assert "oldest" in text and "items()" in text     # memtable quirk...
+    assert "newest" in text and "fixed in pr 4" in text   # ...now fixed
     assert "resize" in text and "spill" in text       # resize semantics
     assert "regenerat" in text                        # the workflow
 

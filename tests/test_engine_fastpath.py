@@ -173,3 +173,32 @@ def test_duplicate_probes_counted_as_cache_hits():
     assert m.cache_hits == 200                # the duplicate occurrences
     assert m.level_probes >= 100              # one real probe per unique key
     assert m.reads == 300
+
+
+def test_items_resolves_memtable_duplicates_to_newest_write():
+    """Regression (PR 4): keys written twice within one memtable must
+    snapshot at their NEWEST value — exactly what a read returns.  The
+    seed resolved to the oldest write, so mid-memtable snapshots (state
+    re-partitioning) carried stale values for hot keys."""
+    s = LSMStore(8.0, value_words=2)
+    s.put_batch(np.array([5, 5, 7], np.int64),
+                np.array([[1, 0], [2, 0], [3, 0]], np.int32))
+    ik, iv = s.items()
+    got, found = s.get_batch(ik)
+    assert found.all()
+    np.testing.assert_array_equal(got, iv)     # snapshot == read view
+    assert iv[list(ik).index(5), 0] == 2
+    # and the snapshot stays frozen across later writes
+    s.put_batch(np.array([5], np.int64), np.array([[9, 0]], np.int32))
+    assert iv[list(ik).index(5), 0] == 2
+
+
+def test_items_memtable_still_wins_over_levels():
+    s = LSMStore(0.5, value_words=2)           # tiny: force flushes
+    s.put_batch(np.arange(2_000, dtype=np.int64),
+                np.ones((2_000, 2), np.int32))   # spills to levels
+    s.put_batch(np.array([17, 17], np.int64),
+                np.array([[5, 0], [6, 0]], np.int32))     # memtable rewrite
+    ik, iv = s.items()
+    assert iv[list(ik).index(17), 0] == 6
+    assert len(ik) == 2_000

@@ -148,3 +148,4 @@ def test_property_store_matches_dict(ops):
     got, found = s.get_batch(probe)
     assert found.all()
     assert [int(x) for x in got[:, 0]] == [oracle[int(k)] for k in probe]
+

@@ -1,0 +1,107 @@
+"""Bin-packing placement: private fleets, the cluster-level shared packer
+(per-tenant attribution, amortized base_mb), and repack/migration cost."""
+import pytest
+
+from repro.core.placement import (MigrationCost, TaskRequest, TMSpec,
+                                  bin_pack, default_tm_spec,
+                                  placement_for_config, placement_requests,
+                                  repack, shared_pack)
+
+
+def reqs(n: int, mb: float, op: str = "op") -> list[TaskRequest]:
+    return [TaskRequest(op, i, mb) for i in range(n)]
+
+
+def test_bin_pack_private_unchanged():
+    spec = TMSpec(slots=4, managed_pool_mb=4 * 158.0, base_mb=1416.0)
+    pl = bin_pack(reqs(6, 158.0), spec)
+    assert pl.n_tms == 2 and pl.cpu_cores == 6
+    assert pl.memory_mb == pytest.approx(2 * 1416.0 + 6 * 158.0)
+
+
+def test_placement_requests_matches_placement_for_config():
+    config = {"a": (2, 1), "b": (3, None), "src": (1, 0)}
+    rs = placement_requests(config, base_mem_mb=158.0, exclude={"src"})
+    assert len(rs) == 5
+    assert {r.op for r in rs} == {"a", "b"}
+    assert sorted(r.memory_mb for r in rs) == [0, 0, 0, 316.0, 316.0]
+    pl = placement_for_config(config, base_mem_mb=158.0, exclude={"src"})
+    pl2 = bin_pack(rs, default_tm_spec(158.0))
+    assert (pl.cpu_cores, pl.memory_mb) == (pl2.cpu_cores, pl2.memory_mb)
+
+
+def test_shared_pack_amortizes_base_mb():
+    """Two 2-task tenants co-reside on ONE TM: total memory strictly below
+    the sum of private placements, and each tenant's attribution carries
+    half the base_mb (slot-proportional)."""
+    spec = TMSpec(slots=4, managed_pool_mb=4 * 158.0, base_mb=1416.0)
+    shared = shared_pack({"a": reqs(2, 158.0), "b": reqs(2, 158.0)}, spec)
+    assert shared.n_tms == 1
+    private = bin_pack(reqs(2, 158.0), spec).memory_mb \
+        + bin_pack(reqs(2, 158.0), spec).memory_mb
+    assert shared.memory_mb < private
+    assert shared.tenants == ["a", "b"]
+    assert shared.tenant_cpu("a") == 2
+    assert shared.tenant_memory_mb("a") \
+        == pytest.approx(2 * 158.0 + 1416.0 / 2)
+    # attributions sum exactly to the fleet totals
+    att = shared.attribution()
+    assert sum(c for c, _ in att.values()) == shared.cpu_cores
+    assert sum(m for _, m in att.values()) \
+        == pytest.approx(shared.memory_mb)
+
+
+def test_shared_pack_deterministic():
+    spec = TMSpec(slots=2, managed_pool_mb=1000.0, base_mb=100.0)
+    by_tenant = {"a": reqs(3, 300.0), "b": reqs(2, 300.0)}
+    a1 = shared_pack(by_tenant, spec).assignment()
+    a2 = shared_pack(by_tenant, spec).assignment()
+    assert a1 == a2 and len(a1) == 5
+
+
+def test_repack_counts_moved_tasks_and_state():
+    spec = TMSpec(slots=2, managed_pool_mb=1000.0, base_mb=100.0)
+    first = shared_pack(
+        {"a": [TaskRequest("x", 0, 500.0), TaskRequest("x", 1, 400.0)]},
+        spec)
+    assert first.n_tms == 1
+    # b's 450 MB task displaces a's 400 MB task to a second TM under FFD
+    new, cost = repack(
+        {"a": [TaskRequest("x", 0, 500.0), TaskRequest("x", 1, 400.0)],
+         "b": [TaskRequest("y", 0, 450.0)]},
+        spec, previous=first)
+    assert new.n_tms == 2
+    assert cost == MigrationCost(tasks_moved=1, state_mb=400.0)
+    # identical requests: repacking is free
+    same, cost2 = repack({"a": [TaskRequest("x", 0, 500.0),
+                                TaskRequest("x", 1, 400.0)]},
+                         spec, previous=first)
+    assert cost2 == MigrationCost()
+    # costs accumulate
+    assert (cost + cost2) == cost
+
+
+def test_tenant_isolation_in_attribution():
+    """A tenant alone on its TMs pays its full base_mb — sharing only
+    helps when tasks actually co-reside."""
+    spec = TMSpec(slots=2, managed_pool_mb=1000.0, base_mb=100.0)
+    shared = shared_pack({"a": reqs(2, 500.0), "b": reqs(2, 500.0)}, spec)
+    assert shared.n_tms == 2                    # pool bound: no co-residency
+    assert shared.tenant_memory_mb("a") == pytest.approx(1000.0 + 100.0)
+
+
+def test_ffd_packing_is_non_monotone():
+    """Characterization: first-fit-decreasing can pack a strictly SMALLER
+    task list into a larger fleet.  This is why the preemption arbiter
+    quotes a give-back before enacting it and why a denied resync of a
+    shrunken footprint keeps the previous reservation standing instead of
+    raising (see scenarios/cluster.py)."""
+    spec = TMSpec(slots=4, managed_pool_mb=1000.0, base_mb=500.0)
+    sizes = [96.0, 241.0, 129.0, 20.0, 207.0, 764.0, 504.0]
+    big = bin_pack([TaskRequest("x", i, s) for i, s in enumerate(sizes)],
+                   spec)
+    sizes[1] = 233.0                              # one task SHRINKS
+    small = bin_pack([TaskRequest("x", i, s) for i, s in enumerate(sizes)],
+                     spec)
+    assert small.n_tms > big.n_tms                # 3 TMs vs 2
+    assert small.memory_mb > big.memory_mb        # 3453 vs 2961
