@@ -1,8 +1,11 @@
-"""Beyond-paper benchmark: JustinServe — Algorithm 1 arbitrating LLM-serving
-replicas (scale-out) vs per-replica KV/prefix-cache HBM budget (scale-up).
+"""Beyond-paper benchmark: JustinServe — registry scaling policies
+arbitrating LLM-serving replicas (scale-out) vs per-replica
+KV/prefix-cache HBM budget (scale-up).
 
-Compares against replica-only (DS2-analogue) scaling on a shared-prefix
-workload: the hybrid policy should hit the target request rate with fewer
+``--policies`` accepts any registered names
+(``repro.core.policy.available_policies()``); the default is the paper's
+ds2/justin pair, and the replica-saving row is computed whenever both are
+present: the hybrid policy should hit the target request rate with fewer
 replicas by growing the prefix cache instead of the fleet.
 """
 from __future__ import annotations
@@ -10,34 +13,41 @@ from __future__ import annotations
 import argparse
 import json
 
+from repro.core.policy import available_policies
 from repro.serve.engine import (JustinServeController, ServeCosts,
                                 WorkloadSpec)
 
 
-def evaluate(target_rps: float = 120.0, verbose: bool = True) -> dict:
+def evaluate(target_rps: float = 120.0, policies=None,
+             verbose: bool = True) -> dict:
     out = {}
-    for policy in ("ds2", "justin"):
+    for policy in policies or ("ds2", "justin"):
         ctl = JustinServeController(target_rps, policy=policy)
         res = ctl.autoscale()
         out[policy] = res
         if verbose:
-            print(f"serve {policy:6s} steps={res['steps']} "
+            print(f"serve {policy:9s} steps={res['steps']} "
                   f"replicas={res['replicas']} level={res['level']} "
                   f"busy={res['busyness']:.2f} theta={res['theta']:.2f} "
                   f"hbm_cache={res['hbm_cache_gb']:.1f}GB", flush=True)
-    d, j = out["ds2"], out["justin"]
-    out["replica_saving"] = 1 - j["replicas"] / d["replicas"]
-    if verbose:
-        print(f"  -> replica saving {out['replica_saving']:.0%}")
+    if "ds2" in out and "justin" in out:
+        d, j = out["ds2"], out["justin"]
+        out["replica_saving"] = 1 - j["replicas"] / d["replicas"]
+        if verbose:
+            print(f"  -> replica saving {out['replica_saving']:.0%}")
     return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--target-rps", type=float, default=120.0)
+    ap.add_argument("--policies", nargs="+", default=None,
+                    choices=available_policies(),
+                    help="registered scaling policies to run "
+                         "(default: ds2 justin)")
     ap.add_argument("--out", default="benchmarks/justinserve_results.json")
     args = ap.parse_args()
-    res = evaluate(args.target_rps)
+    res = evaluate(args.target_rps, args.policies)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=1, default=float)
     print(f"wrote {args.out}")

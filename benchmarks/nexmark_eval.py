@@ -27,6 +27,14 @@ force the neighbor's storage levels down) and adds the co-location
 savings table: per-tenant denials, preemptions, private vs amortized
 memory integrals, and the shared-fleet saving.  ``--cluster-slots`` /
 ``--cluster-mb`` override the auto-sized budget.
+
+``--reconfig-cost {instant,savepoint,handoff}`` makes reconfiguration a
+priced, observable event (``repro.migration``): every enacted C^t pauses
+the job for its planned downtime — full snapshot/restore under
+``savepoint``, moved-MB-only under ``handoff`` — and histories/grids
+carry downtime windows + moved-MB integrals.  ``--migration-budget-mb``
+(with ``--grid --admission``) caps the state MB co-location admissions
+may move per window.
 """
 from __future__ import annotations
 
@@ -46,16 +54,22 @@ DEFAULT_POLICIES = ("ds2", "justin")
 
 def evaluate(queries=None, *, max_level: int = 2, seed: int = 3,
              verbose: bool = True, profile: str | None = None,
-             windows: int = 8, policies=None) -> dict:
+             windows: int = 8, policies=None,
+             reconfig_cost: str = "instant") -> dict:
     """One episode per (query, policy).  ``profile=None`` reproduces the
     paper's fixed-target protocol; a named profile ("ramp", "spike",
     "diurnal", "sinusoid", "step") runs the same comparison under a dynamic
     workload via the scenario subsystem.  ``policies`` may be any subset of
-    the registry (default: the paper's ds2/justin pair)."""
+    the registry (default: the paper's ds2/justin pair).
+    ``reconfig_cost`` prices every reconfiguration (``repro.migration``):
+    ``savepoint`` pauses for the whole state footprint, ``handoff`` only
+    for the MB that moves; the default ``instant`` keeps reconfiguration
+    free (the golden-trace protocol)."""
     queries = queries or list(QUERIES)
     policies = list(policies or DEFAULT_POLICIES)
     out: dict = {"max_level": max_level, "profile": profile,
-                 "policies": policies, "queries": {}}
+                 "policies": policies, "reconfig_cost": reconfig_cost,
+                 "queries": {}}
     for qname in queries:
         row = {}
         for policy in policies:
@@ -63,7 +77,8 @@ def evaluate(queries=None, *, max_level: int = 2, seed: int = 3,
             if profile is not None:
                 from repro.scenarios import run_scenario
                 res = run_scenario(policy, qname, profile, windows=windows,
-                                   seed=seed, max_level=max_level)
+                                   seed=seed, max_level=max_level,
+                                   reconfig_cost=reconfig_cost)
                 hist = res.history
                 s = res.summary()
             else:
@@ -71,18 +86,26 @@ def evaluate(queries=None, *, max_level: int = 2, seed: int = 3,
                 eng = StreamEngine(flow, seed=seed)
                 cfg = ControllerConfig(
                     policy=policy, justin=JustinParams(max_level=max_level))
+                migration = None
+                if reconfig_cost != "instant":
+                    from repro.migration import MigrationRuntime
+                    migration = MigrationRuntime(reconfig_cost)
                 ctl = AutoScaler(eng, TARGET_RATES[qname], cfg,
-                                 policy=make_policy(policy, cfg))
+                                 policy=make_policy(policy, cfg),
+                                 migration=migration)
                 hist = ctl.run()
                 s = ctl.summary()
             s["wall_s"] = round(time.time() - t0, 1)
             s["history"] = [dataclasses.asdict(h) for h in hist]
             row[policy] = s
             if verbose:
+                down = sum(h["reconfig_downtime"] for h in s["history"])
+                extra = f" downtime={down:,.0f}s" \
+                    if reconfig_cost != "instant" else ""
                 print(f"{qname:4s} {policy:9s} steps={s['steps']} "
                       f"rate={s['achieved_rate']:,.0f}/{s['target']:,} "
                       f"cpu={s['cpu_cores']} mem={s['memory_mb']:,.0f}MB "
-                      f"({s['wall_s']}s)", flush=True)
+                      f"({s['wall_s']}s){extra}", flush=True)
         if "ds2" in row and "justin" in row:
             d, j = row["ds2"], row["justin"]
             row["cpu_saving"] = 1 - j["cpu_cores"] / d["cpu_cores"]
@@ -136,6 +159,18 @@ def main() -> None:
                          "from the pair's initial placements)")
     ap.add_argument("--cluster-mb", type=float, default=0.0,
                     help="co-location cluster memory MB (0 = auto-size)")
+    ap.add_argument("--reconfig-cost", default="instant",
+                    choices=["instant", "savepoint", "handoff"],
+                    help="price every reconfiguration as paused downtime: "
+                         "savepoint = full snapshot/restore (downtime ∝ "
+                         "total state MB), handoff = incremental LSM "
+                         "transfer (downtime ∝ moved MB); instant keeps "
+                         "reconfiguration free (the golden-trace default)")
+    ap.add_argument("--migration-budget-mb", type=float, default=None,
+                    help="with --grid --admission: cap the state MB the "
+                         "co-location arbiter lets admissions move per "
+                         "window (over-budget requests are deferred and "
+                         "retried)")
     ap.add_argument("--out", default=None,
                     help="output JSON (default: benchmarks/"
                          "nexmark_results.json, or nexmark_grid.json with "
@@ -156,6 +191,10 @@ def main() -> None:
             and not (args.grid and args.admission):
         ap.error("--cluster-slots/--cluster-mb apply to the co-location "
                  "section: they require --grid --admission")
+    if args.migration_budget_mb is not None \
+            and not (args.grid and args.admission):
+        ap.error("--migration-budget-mb applies to the co-location "
+                 "arbiter: it requires --grid --admission")
     if args.out is None:
         args.out = "benchmarks/nexmark_grid.json" if args.grid \
             else "benchmarks/nexmark_results.json"
@@ -168,12 +207,15 @@ def main() -> None:
                        max_level=args.max_level, admission=args.admission,
                        windows_colocated=args.windows,
                        cluster_slots=args.cluster_slots,
-                       cluster_mb=args.cluster_mb)
+                       cluster_mb=args.cluster_mb,
+                       reconfig_cost=args.reconfig_cost,
+                       migration_budget_mb=args.migration_budget_mb)
         print(grid_markdown(res))
     else:
         res = evaluate(args.queries, max_level=args.max_level,
                        profile=args.profile, windows=args.windows,
-                       seed=args.seed, policies=args.policies)
+                       seed=args.seed, policies=args.policies,
+                       reconfig_cost=args.reconfig_cost)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=1, default=float)
     print(f"wrote {args.out}")

@@ -1,16 +1,22 @@
-"""JustinServe demo (beyond-paper): Algorithm 1 arbitrating LLM-serving
-replica count vs per-replica prefix-cache HBM budget.
+"""JustinServe demo (beyond-paper): a registry ScalingPolicy arbitrating
+LLM-serving replica count vs per-replica prefix-cache HBM budget.
+
+Any registered policy name works (``available_policies()``); the classic
+comparison is the paper's pair plus the Dhalion-style reactive baseline.
 
 Run:  PYTHONPATH=src python examples/serve_elastic.py
 """
+from repro.core.policy import available_policies
 from repro.serve.engine import JustinServeController
 
 TARGET_RPS = 120
+POLICIES = [p for p in ("ds2", "justin", "threshold")
+            if p in available_policies()]
 
-for policy in ("ds2", "justin"):
+for policy in POLICIES:
     ctl = JustinServeController(TARGET_RPS, policy=policy)
     res = ctl.autoscale()
-    print(f"{policy:6s}: replicas={res['replicas']} "
+    print(f"{policy:9s}: replicas={res['replicas']} "
           f"cache-level={res['level']} busy={res['busyness']:.2f} "
           f"prefix-hit-rate={res['theta']:.2f} "
           f"hbm-cache={res['hbm_cache_gb']:.1f} GB")

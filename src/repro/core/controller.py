@@ -35,6 +35,17 @@ private fleet's footprint — and ``shrink_memory()`` is the preemption
 entry point: the arbiter forces a one-level memory give-back (via the
 policy's ``propose_shrink``) to make a higher-priority tenant's request
 fit.
+
+Reconfiguration cost: an optional ``migration``
+(:class:`repro.migration.MigrationRuntime`) prices every enacted
+reconfiguration — a key-range handoff plan over the old/new placements,
+priced as ``savepoint`` (downtime ∝ total state MB) or ``handoff``
+(downtime ∝ moved MB) — and converts the price into PAUSED engine time
+before stabilization: sources keep producing (backlog accrues) while
+nothing processes.  The window's ``HistoryRow`` records the price
+(``reconfig_downtime`` / ``moved_mb``).  Without a runtime, or under the
+default ``instant`` mechanism, enactment is byte-identical to the
+pre-migration loop the golden traces pin.
 """
 from __future__ import annotations
 
@@ -80,12 +91,18 @@ class HistoryRow:
     amortized_mb: float | None = None  # shared-TM attribution (base_mb
                                        # amortized across co-residents);
                                        # None == private placement quote
+    reconfig_downtime: float = 0.0    # paused paper-seconds this window's
+                                      # reconfiguration cost (migration
+                                      # runtime; 0 under "instant")
+    moved_mb: float = 0.0             # state MB that physically travelled
+                                      # for this window's reconfiguration
 
 
 class AutoScaler:
     def __init__(self, engine: StreamEngine, target_rate: float,
                  cfg: ControllerConfig = ControllerConfig(),
-                 *, admission=None, policy: ScalingPolicy | None = None):
+                 *, admission=None, policy: ScalingPolicy | None = None,
+                 migration=None):
         self.engine = engine
         self.flow = engine.flow
         self.target = target_rate
@@ -109,6 +126,11 @@ class AutoScaler:
                                       # counted in ``steps``: they are the
                                       # arbiter's reconfigs, not the
                                       # policy's)
+        # optional ``repro.migration.MigrationRuntime``: prices every
+        # enacted reconfiguration and converts the price into paused
+        # engine time.  None (and the "instant" mechanism) are strict
+        # no-ops — the golden traces' default.
+        self.migration = migration
         self._last_metrics: dict[str, dict] = {}
 
     # ------------------------------------------------------------------ core
@@ -161,20 +183,46 @@ class AutoScaler:
         (:meth:`ScalingPolicy.propose_shrink`), enacts it through the
         normal reconfigure + stabilization path, and returns the new
         private (cpu, mem) footprint; ``None`` when nothing can shrink.
-        Driven by the cluster arbiter when a higher-priority tenant's
-        admission needs the memory; the give-back is counted in
+        Driven by the cluster arbiter when another tenant's admission
+        needs the memory; the give-back is counted in
         ``preemptions``, not ``steps`` (it is the arbiter's
         reconfiguration, not this policy's)."""
         prop = self.policy.propose_shrink(self.flow, self.cfg)
         if prop is None or prop.config == self.flow.config():
             return None
         self.policy.commit(self._last_metrics)
-        self.engine.reconfigure(prop.config)
+        cost = self._enact(prop.config)
+        if cost is not None and self.history:
+            # the give-back's price lands on the victim's current window
+            row = self.history[-1]
+            row.reconfig_downtime += cost.downtime_s
+            row.moved_mb += cost.moved_mb
+        self.preemptions += 1
+        return self.resources()
+
+    def _enact(self, new_config: dict):
+        """Reconfigure + stabilize, pricing the re-shape through the
+        migration runtime when one is attached: the planned downtime
+        becomes PAUSED engine time (sources accrue backlog, nothing
+        processes) before the stabilization window.  Returns the
+        :class:`~repro.migration.costs.ReconfigCost`, or None without a
+        runtime — in which case (and under the "instant" mechanism) the
+        enactment is byte-identical to the pre-migration controller."""
+        cost = None
+        if self.migration is not None:
+            # plan against the OLD config's live stores, before they are
+            # re-partitioned away
+            cost = self.migration.charge(self, self.flow.config(),
+                                         new_config)
+        self.engine.reconfigure(new_config)
+        if cost is not None and cost.downtime_s > 0:
+            self.engine.run_paused(
+                cost.downtime_s * self.cfg.sim_time_scale, self.target)
+        # stabilization: run and discard one short window
         self.engine.run(self.cfg.stabilization_s * self.cfg.sim_time_scale,
                         self.target)
         self.engine.collect()
-        self.preemptions += 1
-        return self.resources()
+        return cost
 
     def step_window(self, w: int = 0, *, target_profile=None,
                     window_hook=None) -> bool:
@@ -226,11 +274,10 @@ class AutoScaler:
         self.policy.commit(metrics)
         if new_config != self.flow.config():
             self.steps += 1
-            self.engine.reconfigure(new_config)
-            # stabilization: run and discard one short window
-            self.engine.run(self.cfg.stabilization_s
-                            * self.cfg.sim_time_scale, self.target)
-            self.engine.collect()
+            cost = self._enact(new_config)
+            if cost is not None:
+                row.reconfig_downtime = cost.downtime_s
+                row.moved_mb = cost.moved_mb
         return False
 
     def run(self, *, max_windows: int | None = None,
@@ -264,10 +311,14 @@ class AutoScaler:
             return {"policy": self.policy.name, "steps": self.steps,
                     "achieved_rate": 0.0, "target": self.target,
                     "cpu_cores": cpu, "memory_mb": mem,
-                    "config": dict(self.flow.config()), "windows": 0}
+                    "config": dict(self.flow.config()), "windows": 0,
+                    "reconfig_downtime_s": 0.0, "moved_mb": 0.0}
         last = self.history[-1]
         return {"policy": self.policy.name, "steps": self.steps,
                 "achieved_rate": last.achieved_rate, "target": self.target,
                 "cpu_cores": last.cpu_cores, "memory_mb": last.memory_mb,
                 "config": {op: pc for op, pc in last.config.items()},
-                "windows": len(self.history)}
+                "windows": len(self.history),
+                "reconfig_downtime_s": sum(h.reconfig_downtime
+                                           for h in self.history),
+                "moved_mb": sum(h.moved_mb for h in self.history)}

@@ -99,9 +99,10 @@ class ScalingPolicy:
     def propose_shrink(self, flow, cfg) -> Proposal | None:
         """Preemptive reclamation (§4.3): propose giving back ONE storage
         level — drop the highest occupied memory level by one on the
-        operator holding it.  The cluster arbiter drives this when a
-        higher-priority tenant's admission needs the memory
-        (``AutoScaler.shrink_memory``).  Returns ``None`` when no operator
+        operator holding it.  The cluster arbiter drives this when
+        another tenant's admission needs the memory
+        (``AutoScaler.shrink_memory``; victims are selected fair-share —
+        see ``scenarios.cluster``).  Returns ``None`` when no operator
         holds a level above 0 — uniform-package policies at the base
         grant have nothing to give back, which is exactly the §4.3
         asymmetry: only hybrid-scaled tenants can be re-shaped in place.

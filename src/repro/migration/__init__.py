@@ -1,0 +1,19 @@
+"""Reconfiguration runtime: state-migration planning, downtime pricing,
+and the paused-window mechanics that make a reconfiguration a *priced,
+observable* event instead of a free function call.
+
+See :mod:`repro.migration.planner` (key-range handoff plans),
+:mod:`repro.migration.costs` (the instant/savepoint/handoff cost model)
+and :mod:`repro.migration.runtime` (the controller-side driver).
+"""
+from repro.migration.costs import (MECHANISMS, CostModel, ReconfigCost)
+from repro.migration.planner import (KEYSPACE, Handoff, MigrationPlan,
+                                     plan_migration)
+from repro.migration.runtime import (MigrationRuntime, ReconfigEvent,
+                                     engine_store_stats)
+
+__all__ = [
+    "KEYSPACE", "Handoff", "MigrationPlan", "plan_migration",
+    "MECHANISMS", "CostModel", "ReconfigCost",
+    "MigrationRuntime", "ReconfigEvent", "engine_store_stats",
+]

@@ -32,12 +32,24 @@ window) supports four orders:
   first (max of CPU share and memory share, ascending);
 * ``"first_come"`` — episodes with the oldest unserved (denied) request go
   first; ties fall back to spec order.
-* ``"preemption"`` — priority order, plus the §4.3 re-shape mechanism:
-  when a request is denied, the arbiter forces *lower-priority* tenants to
-  give back one storage level at a time (``AutoScaler.shrink_memory``,
-  built on the policy protocol's ``propose_shrink``) until the request
-  fits or nothing below the requester can shrink.  Give-backs are recorded
-  per window in ``TenantRun.preemptions`` alongside ``denials``.
+* ``"preemption"`` — priority order for requests, plus the §4.3 re-shape
+  mechanism with **fair-share victim selection**: when a request is
+  denied, the arbiter forces tenants holding more than their fair
+  allotment of the budget (1/N of the larger of their CPU and memory
+  fractions) to give back one storage level at a time
+  (``AutoScaler.shrink_memory``, built on the policy protocol's
+  ``propose_shrink``) — biggest excess first, spec priority breaking
+  ties — until the request fits or no over-allotment tenant can shrink.
+  A tenant at or below its fair share is never preempted; a hog above it
+  is reclaimable even by a lower-priority requester.  Give-backs are
+  recorded per window in ``TenantRun.preemptions`` alongside
+  ``denials``.
+
+A per-window **migration budget** (``migration_budget_mb``) additionally
+caps the state MB admissions may move each window: an admission whose
+quoted migration cost exceeds the remaining allowance is deferred
+through the same denial/retry path (``TenantRun.deferrals``) — the
+"migration-cost budgets in the arbiter" item the ROADMAP queued.
 """
 from __future__ import annotations
 
@@ -141,6 +153,15 @@ class Cluster:
         pl = shared_pack(self._trial(tenant, reqs), self.tm_spec)
         return pl.tenant_cpu(tenant), pl.tenant_memory_mb(tenant)
 
+    def quote_migration(self, tenant: str,
+                        reqs: list[TaskRequest]) -> MigrationCost:
+        """The fleet-level repack cost ``tenant``'s reservation would
+        incur (tasks moved × state MB) WITHOUT committing anything — what
+        a per-window migration budget gates before admission."""
+        _, cost = repack(self._trial(tenant, reqs), self.tm_spec,
+                         self._placement)
+        return cost
+
     def reserve_tasks(self, tenant: str, reqs: list[TaskRequest]) -> bool:
         """Atomically replace ``tenant``'s task list and repack the whole
         fleet; False if the packed totals would overdraw the budget
@@ -215,6 +236,10 @@ class TenantRun:
                                                           # (the give-back
                                                           # COUNT lives in
                                                           # scaler.preemptions)
+    deferrals: list[int] = field(default_factory=list)   # windows denied by
+                                                         # the migration
+                                                         # budget (subset of
+                                                         # ``denials``)
     faults_fired: list = field(default_factory=list)
     first_pending: int | None = None   # window of oldest unserved request
 
@@ -253,13 +278,15 @@ class ColocatedResult:
                 "steps": t.scaler.steps,
                 "denied_windows": list(t.denials),
                 "preempted_windows": list(t.preemptions),
+                "deferred_windows": list(t.deferrals),
                 "slo": t.slo(slack).to_dict(),
             } for t in self.tenants},
         }
-        if self.cluster.shared:
-            mig = self.cluster.migration_total()
-            out["migration"] = {"tasks_moved": mig.tasks_moved,
-                                "state_mb": mig.state_mb}
+        # always emitted (zeroed on private-fleet clusters, which never
+        # repack) so grid JSON keeps one schema across modes
+        mig = self.cluster.migration_total()
+        out["migration"] = {"tasks_moved": mig.tasks_moved,
+                            "state_mb": mig.state_mb}
         return out
 
 
@@ -280,7 +307,10 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
                   *, windows: int = 8, seed: int = 3, max_level: int = 2,
                   admission: str = "priority",
                   cfg: ControllerConfig | None = None,
-                  warm: bool = True) -> ColocatedResult:
+                  warm: bool = True,
+                  reconfig_cost="instant",
+                  migration_budget_mb: float | None = None
+                  ) -> ColocatedResult:
     """Step every episode through ``windows`` decision windows in lockstep,
     arbitrating each window's scale-up requests against ``cluster``'s
     remaining budget.
@@ -294,14 +324,28 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
     configurations is a sizing error, not an admission decision.
 
     With ``admission="preemption"`` the spec list is the priority order
-    and a denied request may be satisfied by forcing lower-priority
-    tenants' storage levels down (see module docstring).  On a shared-TM
-    cluster, footprints are task lists packed into one fleet and history
-    rows carry each tenant's amortized attribution (``amortized_mb``).
+    for *requests*; victims are selected fair-share (see module
+    docstring).  On a shared-TM cluster, footprints are task lists packed
+    into one fleet and history rows carry each tenant's amortized
+    attribution (``amortized_mb``).
+
+    ``reconfig_cost`` (a mechanism name or
+    :class:`repro.migration.CostModel`) attaches a migration runtime to
+    every tenant: reconfigurations pause the tenant's engine for their
+    priced downtime.  ``migration_budget_mb`` caps the state MB the
+    arbiter lets *admissions* move per window, across all tenants: a
+    quoted admission whose migration cost would blow the remaining
+    window budget is deferred — the ordinary denial/retry path, recorded
+    additionally in ``TenantRun.deferrals``.  (On private-fleet clusters
+    the quote comes from the migration planner over the tenant's own
+    placements; on shared-TM clusters from the fleet repack.)
     """
     if admission not in ADMISSION_POLICIES:
         raise ValueError(f"unknown admission policy {admission!r} "
                          f"(have: {', '.join(ADMISSION_POLICIES)})")
+    from repro.migration import CostModel, MigrationRuntime
+    cost_model = reconfig_cost if isinstance(reconfig_cost, CostModel) \
+        else CostModel(mechanism=reconfig_cost)
     specs = [s if isinstance(s, ColocatedSpec) else ColocatedSpec(*s)
              for s in specs]
     base = cfg or ControllerConfig(justin=JustinParams(max_level=max_level))
@@ -330,7 +374,9 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
         if spec.config:
             engine.reconfigure(spec.config)
         scaler = AutoScaler(engine, profile(0.0) if profile else target,
-                            base, policy=make_policy(spec.policy, base))
+                            base, policy=make_policy(spec.policy, base),
+                            migration=None if cost_model.mechanism
+                            == "instant" else MigrationRuntime(cost_model))
         scaler.tenant = name
         scaler.cluster = cluster
         tenants.append(TenantRun(spec=spec, name=name, scaler=scaler,
@@ -348,6 +394,20 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
         if cpu is None:
             cpu, mem = t.scaler.resources()
         return cluster.reserve(t.name, cpu, mem)
+
+    def _migration_quote(t: TenantRun, config: dict | None) -> float:
+        """State MB ``t``'s reservation would move — the migration-budget
+        currency.  Fleet-level repack cost on shared-TM clusters; the
+        migration planner over the tenant's own placements otherwise."""
+        if cluster.shared:
+            return cluster.quote_migration(
+                t.name, t.scaler.task_requests(config)).state_mb
+        from repro.core.placement import bin_pack, default_tm_spec
+        from repro.migration import plan_migration
+        spec = default_tm_spec(base.base_mem_mb)
+        old_pl = bin_pack(t.scaler.task_requests(), spec)
+        new_pl = bin_pack(t.scaler.task_requests(config), spec)
+        return plan_migration(old_pl, new_pl).migration_cost().state_mb
 
     def _footprint_shrank(t: TenantRun) -> bool:
         """Is ``t``'s current task list no larger (slots and managed MB)
@@ -372,29 +432,49 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
 
     def _preempt_for(requester: TenantRun, new_config: dict, cpu, mem,
                      w: int) -> bool:
-        """Force lower-priority tenants' storage levels down, least
-        important first, until the requester's reservation fits.  Returns
-        admission success; every give-back is recorded on the victim."""
-        victims = [v for v in tenants
-                   if prio[v.name] > prio[requester.name]]
-        for victim in reversed(victims):
-            while True:
+        """Fair-share victim selection: force give-backs from tenants
+        holding MORE than their fair allotment of the budget (1/N of the
+        max of CPU and memory fractions), biggest excess first, spec
+        priority breaking ties (lower-priority tenants shrink first).
+        One level at a time, re-ranking after every give-back (shares
+        move), until the requester's reservation fits or no
+        over-allotment tenant can shrink.  Returns admission success;
+        every give-back is recorded on the victim.
+
+        Unlike strict-priority victim selection, a tenant sitting at or
+        below its fair share is never preempted — and a hog above its
+        allotment is reclaimable even by a lower-priority requester.
+        """
+        fair = 1.0 / max(len(tenants), 1)
+        exhausted: set[str] = set()
+        while True:
+            victims = [v for v in tenants
+                       if v is not requester and v.name not in exhausted
+                       and cluster.share(v.name) > fair]
+            victims.sort(key=lambda v: (fair - cluster.share(v.name),
+                                        -prio[v.name]))
+            for victim in victims:
                 sc = victim.scaler
                 prop = sc.policy.propose_shrink(sc.flow, sc.cfg)
                 if prop is None or prop.config == sc.flow.config():
-                    break               # nothing left to give back
+                    exhausted.add(victim.name)   # nothing left to give back
+                    continue
                 # FFD packing is non-monotone (see tests/test_placement.py
                 # ::test_ffd_packing_is_non_monotone): a shrunk task list
                 # can pack into a LARGER fleet.  Quote the give-back
                 # BEFORE enacting it and skip this victim when shrinking
-                # would not actually free budget.
+                # would not actually free budget — but do NOT mark it
+                # exhausted: a later give-back reshapes the fleet and the
+                # quote may succeed on the re-rank (only propose_shrink
+                # exhaustion, which depends solely on the victim's own
+                # config, is stable enough to cache).
                 if cluster.shared:
                     if not cluster.reserve_tasks(
                             victim.name, sc.task_requests(prop.config)):
-                        break
+                        continue
                 elif not cluster.fits(victim.name,
                                       *sc.resources(prop.config)):
-                    break
+                    continue
                 shrunk = sc.shrink_memory()
                 assert shrunk is not None   # prop said there was a level
                 if not victim.preemptions or victim.preemptions[-1] != w:
@@ -404,7 +484,9 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
                     assert freed            # same quote fits() passed above
                 if _reserve(requester, new_config, cpu, mem):
                     return True
-        return False
+                break               # shares moved: re-rank the victims
+            else:
+                return False        # no over-allotment tenant can shrink
 
     for w in range(windows):
         # the attribution backing the configs that RUN during this window
@@ -414,8 +496,22 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
         # makes its row slightly conservative: it held the pre-shrink
         # grants when the window began)
         att_start = dict(cluster.used_mem)
+        budget_left = migration_budget_mb     # per-window allowance
         for t in _arbitration_order(tenants, cluster, admission):
             def admit(scaler, new_config, cpu, mem, _t=t, _w=w):
+                nonlocal budget_left
+                quote_mb = 0.0
+                if budget_left is not None:
+                    # a quoted admission whose migration cost exceeds the
+                    # window's remaining budget is DEFERRED — the normal
+                    # denial/retry path, additionally marked a deferral
+                    quote_mb = _migration_quote(_t, new_config)
+                    if quote_mb > budget_left + 1e-9:
+                        _t.deferrals.append(_w)
+                        _t.denials.append(_w)
+                        if _t.first_pending is None:
+                            _t.first_pending = _w
+                        return False
                 ok = _reserve(_t, new_config, cpu, mem)
                 if not ok and admission == "preemption":
                     ok = _preempt_for(_t, new_config, cpu, mem, _w)
@@ -423,6 +519,8 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
                     _t.denials.append(_w)
                     if _t.first_pending is None:
                         _t.first_pending = _w
+                elif budget_left is not None:
+                    budget_left -= quote_mb
                 return ok
 
             def hook(eng, _w, _t=t):

@@ -21,6 +21,13 @@ carries the admission-aware-placement axes — per-tenant amortized-memory
 integrals (base_mb amortized across co-resident TMs), a preemption column
 (forced give-backs suffered), and the shared-fleet vs
 sum-of-private-fleets memory saving.
+
+``--reconfig-cost {instant,savepoint,handoff}`` makes every episode PAY
+for its reconfigurations (``repro.migration``): cells gain downtime
+windows / paused seconds / moved-MB columns and :func:`reconfig_markdown`
+renders the headline comparison.  ``--migration-budget-mb`` caps the
+state MB co-location admissions may move per window (deferrals reuse the
+denial/retry path).
 """
 from __future__ import annotations
 
@@ -38,6 +45,8 @@ def run_colocation(queries=None, admission: str = "preemption", *,
                    windows: int = 5, seed: int = 3, max_level: int = 2,
                    cpu_slots: int = 0, memory_mb: float = 0.0,
                    slack: float = DEFAULT_SLACK,
+                   reconfig_cost: str = "instant",
+                   migration_budget_mb: float | None = None,
                    verbose: bool = True) -> list[dict]:
     """Per query: the ds2/justin pair competing on ONE shared-TM cluster
     under ``admission`` (ds2 is the higher-priority tenant, so under
@@ -75,7 +84,9 @@ def run_colocation(queries=None, admission: str = "preemption", *,
         cluster = Cluster(slots, mem,
                           tm_spec=default_tm_spec(cfg.base_mem_mb))
         res = run_colocated(specs, cluster, windows=windows, seed=seed,
-                            admission=admission, cfg=cfg)
+                            admission=admission, cfg=cfg,
+                            reconfig_cost=reconfig_cost,
+                            migration_budget_mb=migration_budget_mb)
         # both integrals quote the config running during each window:
         # private fleets vs the tenant's amortized shared-TM attribution
         shared_mb_w = sum(t.slo(slack).amortized_mb_windows
@@ -84,10 +95,13 @@ def run_colocation(queries=None, admission: str = "preemption", *,
         cell = {"query": qname, "admission": admission,
                 "cluster": {"cpu_slots": slots, "memory_mb": mem,
                             "shared_tm": True},
+                "reconfig_cost": reconfig_cost,
+                "migration_budget_mb": migration_budget_mb,
                 "tenants": {t.name: {
                     "policy": t.spec.policy,
                     "denied": len(t.denials),
                     "preempted": len(t.preemptions),
+                    "deferred": len(t.deferrals),
                     "slo": t.slo(slack).to_dict()} for t in res.tenants},
                 "shared_mb_windows": shared_mb_w,
                 "private_mb_windows": private_mb_w,
@@ -111,12 +125,21 @@ def run_grid(queries=None, profiles=None, policies=None, *,
              windows: int = 8, seed: int = 3, max_level: int = 2,
              slack: float = DEFAULT_SLACK, verbose: bool = True,
              admission: str | None = None, windows_colocated: int = 5,
-             cluster_slots: int = 0, cluster_mb: float = 0.0) -> dict:
+             cluster_slots: int = 0, cluster_mb: float = 0.0,
+             reconfig_cost: str = "instant",
+             migration_budget_mb: float | None = None) -> dict:
     """Run the full grid; returns ``{"cells": [...], "meta": {...}}`` where
     each cell is one (policy, query, profile) episode's summary + SLO
     scorecard.  ``policies`` defaults to every registered policy.  With
     ``admission`` set, a ``"colocation"`` section is added (see
-    :func:`run_colocation`)."""
+    :func:`run_colocation`).
+
+    ``reconfig_cost`` selects the reconfiguration mechanism every episode
+    pays (``instant`` — the free default — or ``savepoint``/``handoff``;
+    see ``repro.migration``): cells then carry downtime-window counts,
+    total paused seconds and the moved-MB integral in their scorecards.
+    ``migration_budget_mb`` caps the state MB the co-location arbiter
+    lets admissions move per window (requires ``admission``)."""
     queries = list(queries or QUERIES)
     profiles = list(profiles or PROFILES)
     policies = list(policies or available_policies())
@@ -125,7 +148,8 @@ def run_grid(queries=None, profiles=None, policies=None, *,
         for prof in profiles:
             for policy in policies:
                 res = run_scenario(policy, qname, prof, windows=windows,
-                                   seed=seed, max_level=max_level)
+                                   seed=seed, max_level=max_level,
+                                   reconfig_cost=reconfig_cost)
                 rep = slo_report(res.history, slack)
                 cell = {"policy": policy, "query": qname, "profile": prof,
                         "steps": res.steps,
@@ -139,17 +163,22 @@ def run_grid(queries=None, profiles=None, policies=None, *,
                           f"steps={res.steps} viol={rep.violations} "
                           f"catchup={'-' if cu is None else f'{cu:.0f}s'} "
                           f"cpu_w={rep.cpu_slot_windows} "
-                          f"mb_w={rep.mb_windows:,.0f}", flush=True)
+                          f"mb_w={rep.mb_windows:,.0f} "
+                          f"down_w={rep.downtime_windows}", flush=True)
     out = {"cells": cells,
            "meta": {"queries": queries, "profiles": profiles,
                     "policies": list(policies), "windows": windows,
                     "seed": seed, "max_level": max_level, "slack": slack,
-                    "admission": admission}}
+                    "admission": admission,
+                    "reconfig_cost": reconfig_cost,
+                    "migration_budget_mb": migration_budget_mb}}
     if admission is not None:
         out["colocation"] = run_colocation(
             queries, admission, windows=windows_colocated, seed=seed,
             max_level=max_level, cpu_slots=cluster_slots,
-            memory_mb=cluster_mb, slack=slack, verbose=verbose)
+            memory_mb=cluster_mb, slack=slack,
+            reconfig_cost=reconfig_cost,
+            migration_budget_mb=migration_budget_mb, verbose=verbose)
     return out
 
 
@@ -214,21 +243,51 @@ def cells_markdown(grid: dict) -> str:
 
 
 def colocation_markdown(cells: list[dict]) -> str:
-    """The co-location savings table: per tenant the denials/preemptions
-    and both memory integrals (private quote vs amortized shared-TM
-    attribution), per cell the shared-fleet saving over private fleets."""
+    """The co-location savings table: per tenant the denials/preemptions/
+    budget-deferrals and both memory integrals (private quote vs
+    amortized shared-TM attribution), per cell the shared-fleet saving
+    over private fleets."""
     out = ["| query | admission | tenant | policy | denied | preempted | "
-           "recovered | MB-w private | MB-w amortized | shared saving |",
-           "|" + "---|" * 10]
+           "deferred | recovered | MB-w private | MB-w amortized | "
+           "shared saving |",
+           "|" + "---|" * 11]
     for c in cells:
         for name, t in c["tenants"].items():
             s = t["slo"]
             out.append(
                 f"| {c['query']} | {c['admission']} | {name} "
                 f"| {t['policy']} | {t['denied']} | {t['preempted']} "
+                f"| {t.get('deferred', 0)} "
                 f"| {s['recovered']} | {s['mb_windows']:,.0f} "
                 f"| {s['amortized_mb_windows']:,.0f} "
                 f"| {c['shared_mem_saving']:.0%} |")
+    return "\n".join(out)
+
+
+def reconfig_markdown(grid: dict) -> str:
+    """The reconfiguration-cost headline table: per (query, profile,
+    policy) the price of churn under the grid's mechanism — steps taken,
+    windows paused by a reconfiguration, total paused paper-seconds, and
+    the state MB moved.  This is where a churn-happy policy (threshold's
+    doubling ratchet) pays for its extra reconfigurations in downtime
+    while justin's fewer steps win, and where ``handoff`` makes
+    memory-only adjustments near-free."""
+    mech = grid["meta"].get("reconfig_cost", "instant")
+    out = [f"Reconfiguration cost (mechanism: `{mech}`)", "",
+           "| query | profile | policy | steps | downtime windows | "
+           "downtime s | moved MB |",
+           "|" + "---|" * 7]
+    for q in grid["meta"]["queries"]:
+        for prof in grid["meta"]["profiles"]:
+            for pol in grid["meta"]["policies"]:
+                c = grid_cell(grid, pol, q, prof)
+                if c is None:
+                    continue
+                s = c["slo"]
+                out.append(
+                    f"| {q} | {prof} | {pol} | {c['steps']} "
+                    f"| {s['downtime_windows']} | {s['downtime_s']:,.0f} "
+                    f"| {s['moved_mb']:,.0f} |")
     return "\n".join(out)
 
 
@@ -236,6 +295,8 @@ def grid_markdown(grid: dict) -> str:
     """Render the grid as GitHub-flavored markdown: the all-policies cell
     table, plus the ds2-vs-justin savings comparison when both ran."""
     parts = [cells_markdown(grid)]
+    if grid["meta"].get("reconfig_cost", "instant") != "instant":
+        parts.append(reconfig_markdown(grid))
     if grid.get("colocation"):
         parts.append(colocation_markdown(grid["colocation"]))
     rows = comparison_rows(grid)

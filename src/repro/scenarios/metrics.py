@@ -19,7 +19,12 @@ policies on:
   (base_mb split across co-residents) instead of a private fleet's quote;
 * **admission outcomes** — denied windows (requests the cluster rejected)
   and preempted windows (forced memory give-backs suffered under
-  ``admission="preemption"``).
+  ``admission="preemption"``);
+* **reconfiguration cost** — downtime windows (windows whose
+  reconfiguration paused the job), total paused paper-seconds, and the
+  moved-MB integral (state that physically travelled), priced by the
+  migration runtime (``repro.migration``); all zero under the default
+  ``instant`` mechanism.
 
 Everything is computed from plain ``HistoryRow`` lists, so the same
 functions serve single-episode scenarios, co-located cluster runs, and the
@@ -143,6 +148,19 @@ def amortized_mb_windows(history: list) -> float:
                else h.amortized_mb for h in history)
 
 
+def reconfig_cost_totals(history: list) -> tuple[int, float, float]:
+    """(downtime windows, total downtime paper-s, moved-MB integral):
+    the reconfiguration-cost axes of a history.  A *downtime window* is a
+    window whose reconfiguration paused the job (``reconfig_downtime``
+    > 0) — churn-happy policies accumulate them even when each pause is
+    short; the moved-MB integral is the total state that physically
+    travelled.  All zero for histories run without a migration runtime
+    (or under the ``instant`` mechanism)."""
+    down = [getattr(h, "reconfig_downtime", 0.0) for h in history]
+    return (sum(1 for d in down if d > 0), sum(down),
+            sum(getattr(h, "moved_mb", 0.0) for h in history))
+
+
 @dataclass(frozen=True)
 class SLOReport:
     """Per-episode SLO scorecard; ``slo_report`` builds it."""
@@ -158,6 +176,10 @@ class SLOReport:
                                      # (== mb_windows on private placements)
     denied_windows: int              # admission rejections (co-location)
     preempted_windows: int           # forced memory give-backs suffered
+    downtime_windows: int            # windows whose reconfiguration paused
+                                     # the job (migration runtime)
+    downtime_s: float                # total paused paper-seconds
+    moved_mb: float                  # state-moved integral across windows
     slack: float
 
     def to_dict(self) -> dict:
@@ -171,6 +193,7 @@ def slo_report(history: list, slack: float = DEFAULT_SLACK,
     """The full scorecard for one controller history."""
     bad = violation_windows(history, slack)
     cpu_w, mb_w = resource_integrals(history)
+    down_w, down_s, moved = reconfig_cost_totals(history)
     last = history[-1] if history else None
     return SLOReport(
         windows=len(history),
@@ -186,4 +209,7 @@ def slo_report(history: list, slack: float = DEFAULT_SLACK,
         denied_windows=sum(1 for h in history if h.denied),
         preempted_windows=sum(1 for h in history
                               if getattr(h, "preempted", False)),
+        downtime_windows=down_w,
+        downtime_s=down_s,
+        moved_mb=moved,
         slack=slack)

@@ -66,7 +66,8 @@ def run_scenario(policy: str, query: str, profile: Profile | str,
                  *, faults: FaultSchedule | list | None = None,
                  windows: int = 8, seed: int = 3, max_level: int = 2,
                  cfg: ControllerConfig | None = None,
-                 warm: bool = True) -> ScenarioResult:
+                 warm: bool = True,
+                 reconfig_cost="instant") -> ScenarioResult:
     """Drive ``policy`` (any registered name — see
     ``repro.core.policy.available_policies()``) on Nexmark ``query`` under
     a time-varying ``profile`` (a :class:`Profile` or a named shape from
@@ -74,7 +75,10 @@ def run_scenario(policy: str, query: str, profile: Profile | str,
 
     Returns the full controller history: what Fig. 5 plots, but over a
     dynamic workload.  ``cfg`` is a template: its ``policy`` field is
-    overridden from the ``policy`` argument.
+    overridden from the ``policy`` argument.  ``reconfig_cost`` (a
+    mechanism name or :class:`repro.migration.CostModel`) prices every
+    reconfiguration as paused downtime; the default ``"instant"`` keeps
+    reconfiguration free, as the golden traces pin.
     """
     cfg = cfg or ControllerConfig(policy=policy,
                                   justin=JustinParams(max_level=max_level))
@@ -88,8 +92,14 @@ def run_scenario(policy: str, query: str, profile: Profile | str,
 
     flow = QUERIES[query]()
     engine = StreamEngine(flow, seed=seed, warm=warm)
+    from repro.migration import CostModel, MigrationRuntime
+    cost_model = reconfig_cost if isinstance(reconfig_cost, CostModel) \
+        else CostModel(mechanism=reconfig_cost)
+    migration = None if cost_model.mechanism == "instant" \
+        else MigrationRuntime(cost_model)
     scaler = AutoScaler(engine, profile(0.0), cfg,
-                        policy=make_policy(policy, cfg))
+                        policy=make_policy(policy, cfg),
+                        migration=migration)
     fired: list = []
 
     def hook(eng, w):

@@ -2,7 +2,12 @@
 
 Continuous-batching inference *is* stream processing (DESIGN.md §4):
 requests are events, prefill/decode are the stateful operators, the paged
-KV cache is the state backend.  The unmodified Algorithm 1 arbitrates:
+KV cache is the state backend.  The controller drives a registry
+:class:`~repro.core.policy.ScalingPolicy` (``ds2``, ``justin``,
+``threshold``, or anything ``@register_policy``-ed) over a one-operator
+dataflow view of the fleet (:class:`_ServeFlow`) — the same pluggable
+surface the streaming controller uses.  Under ``justin``, the unmodified
+Algorithm 1 arbitrates:
 
   * scale OUT  — add decode replicas (more data-parallel mesh slices),
   * scale UP   — double a replica's HBM page budget (bigger prefix cache),
@@ -20,8 +25,9 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.justin import (JustinParams, JustinState, OperatorDecision,
-                               commit, justin_policy)
+from repro.core.controller import ControllerConfig
+from repro.core.justin import JustinParams
+from repro.core.policy import make_policy
 from repro.serve.kv_cache import PagedKVCache, PageSpec
 
 
@@ -107,8 +113,43 @@ class RequestGen:
 BASE_HBM_BUDGET = 512 * 2 * 1024 * 1024      # level 0: 512 pages (1 GB)
 
 
+class _ServeFlow:
+    """The :class:`~repro.core.policy.ScalingPolicy` protocol's dataflow
+    view of the serving fleet: one source (the request stream) feeding one
+    stateful operator (the replica pool).  Lets the generic registry
+    policies — ds2's true-rate model, Justin's Algorithm 1, threshold's
+    reactive doubling — drive serving without any serve-specific
+    dispatch."""
+
+    def __init__(self, controller: "JustinServeController"):
+        self._ctl = controller
+
+    def topo_order(self) -> list[str]:
+        return ["requests", "serving"]
+
+    def sources(self) -> list[str]:
+        return ["requests"]
+
+    def sinks(self) -> list[str]:
+        return []
+
+    def upstream(self, name: str) -> list[str]:
+        return ["requests"] if name == "serving" else []
+
+    def downstream(self, name: str) -> list[str]:
+        return ["serving"] if name == "requests" else []
+
+    def config(self) -> dict[str, tuple[int, int | None]]:
+        return {"requests": (1, None),
+                "serving": (len(self._ctl.replicas), self._ctl.level)}
+
+
 class JustinServeController:
-    """Algorithm 1 driving (replicas, page-budget level)."""
+    """A registry :class:`ScalingPolicy` driving (replicas, page-budget
+    level) — ``policy`` is any registered name (``ds2``, ``justin``,
+    ``threshold``, ...), resolved through ``make_policy`` exactly like
+    the streaming controller's; the old internal ds2/justin string
+    switch is gone."""
 
     def __init__(self, target_rps: float, *, policy: str = "justin",
                  costs: ServeCosts = ServeCosts(),
@@ -123,7 +164,11 @@ class JustinServeController:
         self.gen = RequestGen(workload)
         self.level = 0
         self.replicas = [self._new_replica()]
-        self.jstate = JustinState()
+        # the serve-shaped ControllerConfig the registry policy runs under
+        self._cfg = ControllerConfig(policy=policy, justin=params,
+                                     max_parallelism=max_replicas)
+        self._policy = make_policy(policy, self._cfg)
+        self._flow = _ServeFlow(self)
         self.history: list[dict] = []
         self.steps = 0
 
@@ -151,6 +196,23 @@ class JustinServeController:
             min(1.0, budget_ms / max(r.stats.busy_ms, 1e-9))
             for r in self.replicas) * n_req / len(self.replicas) / seconds
         return {
+            # the request stream, as the policy protocol's source operator
+            "requests": {
+                "stateful": False,
+                "parallelism": 1,
+                "memory_level": None,
+                "busyness": 0.0,
+                "busy_s": 0.0,
+                "processed": n_req,
+                "rate_in": n_req / seconds,
+                "rate_out": n_req / seconds,
+                "rate_processed": n_req / seconds,
+                "selectivity": 1.0,
+                "theta": None,
+                "tau_ms": None,
+                "backlog": 0,
+                "blocked": False,
+            },
             "serving": {
                 "stateful": True,
                 "parallelism": len(self.replicas),
@@ -179,20 +241,21 @@ class JustinServeController:
                                  "level": self.level, **m})
             if not over:
                 break
-            # DS2 proposal: replicas to bring busyness to 0.8
-            want = int(np.ceil(len(self.replicas) * m["busyness"] / 0.8))
-            ds2_p = {"serving": min(want, self.max_replicas)}
-            if self.policy == "ds2":
-                decision = OperatorDecision(ds2_p["serving"], 0, False)
-            else:
-                decision = justin_policy(
-                    None, metrics, ds2_p, self.jstate, self.params)["serving"]
-                commit(self.jstate, {"serving": decision}, metrics)
+            # the registry policy owns the whole proposal surface: ds2's
+            # true-rate model, Justin's Algorithm 1 over it (cancel-out +
+            # HBM scale-up), threshold's doubling — no string dispatch.
+            # Serving always enacts, so propose-and-commit in one go.
+            proposal = self._policy.propose(self._flow, metrics,
+                                            self.target_rps, self._cfg)
+            self._policy.commit(metrics)
+            p_new, lvl = proposal.config["serving"]
+            if (p_new, lvl or 0) == (len(self.replicas), self.level):
+                continue                    # proposal == current config
             self.steps += 1
-            self.level = decision.memory_level or 0
-            while len(self.replicas) < decision.parallelism:
+            self.level = lvl or 0
+            while len(self.replicas) < p_new:
                 self.replicas.append(self._new_replica())
-            del self.replicas[decision.parallelism:]
+            del self.replicas[p_new:]
             for r in self.replicas:
                 r.cache.resize(BASE_HBM_BUDGET * (2 ** self.level))
         last = self.history[-1]

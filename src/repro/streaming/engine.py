@@ -455,6 +455,34 @@ class StreamEngine:
         for _ in range(int(round(seconds / self.tick_s))):
             self.run_tick(target_rate)
 
+    def run_paused(self, seconds: float, target_rate: float) -> None:
+        """Reconfiguration downtime: the job is stopped, the world is not.
+        Sources keep producing (they model external arrival — a Kafka
+        topic does not pause for a savepoint) until backpressure blocks
+        them, but NO operator processes, so arrivals accrue as queued
+        backlog the resumed configuration must drain — the catch-up the
+        SLO metrics measure.  Task time accrues for every operator so a
+        caller collecting over the pause sees diluted busyness; on the
+        controller path these stats are discarded with the stabilization
+        window, and the cost surfaces through the backlog alone."""
+        for _ in range(int(round(seconds / self.tick_s))):
+            for name in self.topo:
+                node = self.flow.nodes[name]
+                st = self.stats[name]
+                st.task_time_s += self.tick_s * node.parallelism
+                if isinstance(node.op, SourceOp):
+                    if self._downstream_room(name):
+                        out = node.op.emit(int(target_rate * self.tick_s),
+                                           self.now)
+                        self.source_emitted += len(out)
+                        st.in_events += len(out)
+                        st.out_events += len(out)
+                        st.processed += len(out)
+                        self._emit(name, out)
+                    else:
+                        st.blocked = True
+            self.now += self.tick_s
+
     # --------------------------------------------------------------- metrics
     def collect(self, reset: bool = True) -> dict[str, dict]:
         out = {}

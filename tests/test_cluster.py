@@ -260,6 +260,38 @@ def preemption_pair(admission: str, windows: int = 5):
                          admission=admission)
 
 
+def test_fair_share_preemption_reclaims_over_allotment_hog():
+    """Satellite pin: preemption victims are selected by resource share
+    above the fair allotment (1/N of the budget), not by strict priority
+    order.  Here the memory hog is the HIGHEST-priority tenant and the
+    requester the lowest — under the old lower-priority-only victim walk
+    the requester had nobody to reclaim from and starved forever; under
+    fair-share selection the over-allotment hog gives back its levels and
+    the requester recovers.  Priority stays a tiebreak between equally
+    over-share victims."""
+    specs = [ColocatedSpec("static", "q11", name="HOG", target=5_000,
+                           config={"user_sessions": (6, 2)}),
+             ColocatedSpec("ds2", "q1", name="REQ")]
+
+    starved = run_colocated(specs, Cluster(cpu_slots=16, memory_mb=8500.0),
+                            windows=5, cfg=quick_cfg(),
+                            admission="priority")
+    req = starved.tenant("REQ")
+    assert req.denials == list(range(len(req.history)))
+    assert not req.slo().recovered
+
+    freed = run_colocated(specs, Cluster(cpu_slots=16, memory_mb=8500.0),
+                          windows=5, cfg=quick_cfg(),
+                          admission="preemption")
+    req2, hog2 = freed.tenant("REQ"), freed.tenant("HOG")
+    # the hog sat above its fair allotment (6624 of 8500 MB > 1/2), so
+    # the LOWER-priority requester could reclaim it
+    assert hog2.preemptions
+    assert hog2.scaler.flow.nodes["user_sessions"].memory_level < 2
+    assert req2.slo().recovered
+    assert req2.history[-1].cpu_cores > req.history[-1].cpu_cores
+
+
 def test_preemption_admits_what_priority_starves():
     """Acceptance headline: on the same budget, ``priority`` leaves the
     high-priority tenant denied every window; ``preemption`` forces the
