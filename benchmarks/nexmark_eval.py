@@ -171,6 +171,11 @@ def main() -> None:
                          "co-location arbiter lets admissions move per "
                          "window (over-budget requests are deferred and "
                          "retried)")
+    ap.add_argument("--driver", default="vectorized",
+                    choices=["vectorized", "scalar"],
+                    help="with --grid --admission: co-location fleet "
+                         "driver (scalar = the reference oracle loop; "
+                         "both are decision-identical)")
     ap.add_argument("--out", default=None,
                     help="output JSON (default: benchmarks/"
                          "nexmark_results.json, or nexmark_grid.json with "
@@ -209,7 +214,8 @@ def main() -> None:
                        cluster_slots=args.cluster_slots,
                        cluster_mb=args.cluster_mb,
                        reconfig_cost=args.reconfig_cost,
-                       migration_budget_mb=args.migration_budget_mb)
+                       migration_budget_mb=args.migration_budget_mb,
+                       driver=args.driver)
         print(grid_markdown(res))
     else:
         res = evaluate(args.queries, max_level=args.max_level,

@@ -122,6 +122,46 @@ def bench_colocation() -> None:
          f"saving={1 - shared / private:.2f}")
 
 
+def bench_fleet() -> None:
+    """Thousand-tenant fleet driver: vectorized ``run_colocated`` over a
+    sampled population, headline = simulated tenant-windows per second.
+    Writes ``BENCH_cluster.json`` (schema checked by tools/check_bench.py).
+
+    Scale: ``run.py fleet [tenants windows]`` (default 1000 x 100); when
+    the whole suite runs (no selector) the quick 128 x 20 variant keeps
+    the total under a minute."""
+    import json
+    import os
+
+    from repro.scenarios import fleet_stats, run_fleet
+    argv = sys.argv[1:]
+    if argv and argv[0] == "fleet":
+        tenants = int(argv[1]) if len(argv) > 1 else 1000
+        windows = int(argv[2]) if len(argv) > 2 else 100
+    else:
+        tenants, windows = 128, 20
+    runs = []
+    for admission in ("fair_share", "preemption"):
+        t0 = time.time()
+        res = run_fleet(tenants, windows, admission=admission, seed=0)
+        st = fleet_stats(res, time.time() - t0)
+        st["driver"] = "vectorized"
+        st["seed"] = 0
+        runs.append(st)
+        _row(f"fleet_{admission}_{tenants}x{windows}",
+             st["seconds"] * 1e6,
+             f"tw_per_s={st['tenant_windows_per_s']:.0f};"
+             f"denied={st['denied_tenant_windows']};"
+             f"deferred={st['deferred_tenant_windows']};"
+             f"preempted={st['preempted_tenant_windows']}")
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_cluster.json")
+    with open(path, "w") as f:
+        json.dump({"bench": "cluster_fleet", "schema_version": 1,
+                   "runs": runs}, f, indent=2)
+        f.write("\n")
+
+
 def bench_justinserve() -> None:
     """Beyond-paper: hybrid LLM-serving elasticity."""
     from benchmarks.justinserve_bench import evaluate

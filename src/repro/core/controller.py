@@ -131,6 +131,13 @@ class AutoScaler:
         # engine time.  None (and the "instant" mechanism) are strict
         # no-ops — the golden traces' default.
         self.migration = migration
+        # optional fleet-wide placement-quote cache, attached by the
+        # vectorized co-location driver: private-fleet quotes are pure
+        # functions of (query, base grant, transformed config), so one
+        # dict shared across tenants collapses N identical bin_packs per
+        # window into one per DISTINCT configuration.  None (the
+        # default, and the scalar oracle) recomputes every quote.
+        self.quote_cache: dict | None = None
         self._last_metrics: dict[str, dict] = {}
 
     # ------------------------------------------------------------------ core
@@ -173,9 +180,19 @@ class AutoScaler:
             return cluster.quote(self.tenant, self.task_requests(config))
         config = config if config is not None else self.flow.config()
         config = self.policy.resources_config(config)
+        key = None
+        if self.quote_cache is not None:
+            key = (self.flow.name, self.cfg.base_mem_mb,
+                   tuple(sorted(config.items())))
+            hit = self.quote_cache.get(key)
+            if hit is not None:
+                return hit
         pl = placement_for_config(config, base_mem_mb=self.cfg.base_mem_mb,
                                   exclude=set(self.flow.sources()))
-        return pl.cpu_cores, pl.memory_mb
+        out = (pl.cpu_cores, pl.memory_mb)
+        if key is not None:
+            self.quote_cache[key] = out
+        return out
 
     def shrink_memory(self) -> tuple[int, float] | None:
         """Forced memory give-back — the §4.3 preemption mechanism.  Asks

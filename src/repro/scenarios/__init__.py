@@ -13,11 +13,15 @@ docs/architecture.md):
   windows, catch-up time, p95 backlog, resource-time integrals);
 * ``cluster`` — a shared finite ``Cluster`` budget plus ``run_colocated``,
   stepping N (policy, query, profile) episodes in lockstep with per-window
-  admission arbitration (priority / fair_share / first_come);
+  admission arbitration (priority / fair_share / first_come / preemption),
+  with a vectorized structure-of-arrays fleet driver (and the original
+  scalar loop as its decision-identical oracle);
+* ``population`` — fleet-scale tenant sampling (heavy-tailed rates,
+  staggered diurnal phases, flash crowds, faults) plus ``run_fleet``;
 * ``grid`` — the {policy} × {profile} × {query} evaluation grid behind
   ``benchmarks/nexmark_eval.py --grid``.
 """
-from repro.scenarios.cluster import (ADMISSION_POLICIES, Cluster,
+from repro.scenarios.cluster import (ADMISSION_POLICIES, DRIVERS, Cluster,
                                      ColocatedResult, ColocatedSpec,
                                      TenantRun, run_colocated)
 from repro.scenarios.faults import (FaultSchedule, KillTask, SetStraggler,
@@ -29,6 +33,9 @@ from repro.scenarios.metrics import (CatchUp, SLOReport,
                                      catch_up_episodes, catch_up_time_s,
                                      p95_backlog, resource_integrals,
                                      slo_report, violation_windows)
+from repro.scenarios.population import (PopulationSpec, fleet_cfg,
+                                        fleet_stats, run_fleet,
+                                        sample_population, size_cluster)
 from repro.scenarios.profiles import (Constant, Diurnal, Profile, Ramp,
                                       Sinusoid, Spike, Step, make_profile)
 from repro.scenarios.runner import ScenarioResult, run_scenario
@@ -40,8 +47,10 @@ __all__ = [
     "CatchUp", "SLOReport", "catch_up_episodes", "catch_up_time_s",
     "p95_backlog", "resource_integrals", "slo_report", "violation_windows",
     "amortized_mb_windows",
-    "ADMISSION_POLICIES", "Cluster", "ColocatedResult", "ColocatedSpec",
-    "TenantRun", "run_colocated",
+    "ADMISSION_POLICIES", "DRIVERS", "Cluster", "ColocatedResult",
+    "ColocatedSpec", "TenantRun", "run_colocated",
+    "PopulationSpec", "fleet_cfg", "fleet_stats", "run_fleet",
+    "sample_population", "size_cluster",
     "colocation_markdown", "comparison_rows", "grid_markdown",
     "run_colocation", "run_grid",
 ]

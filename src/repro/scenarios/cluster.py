@@ -49,11 +49,38 @@ A per-window **migration budget** (``migration_budget_mb``) additionally
 caps the state MB admissions may move each window: an admission whose
 quoted migration cost exceeds the remaining allowance is deferred
 through the same denial/retry path (``TenantRun.deferrals``) — the
-"migration-cost budgets in the arbiter" item the ROADMAP queued.
+"migration-cost budgets in the arbiter" item the ROADMAP queued.  The
+budget covers *everything* an admission moves: preemption give-backs are
+quoted and charged like any other migration (an unaffordable give-back
+is skipped, and the whole request deferred when the fleet cannot be
+re-shaped within the window's remaining allowance), and after give-backs
+re-shape the fleet the requester's own move is re-quoted at the
+post-preemption price rather than charged its stale pre-preemption
+quote.
+
+Two interchangeable drivers step the fleet (``driver=`` on
+:func:`run_colocated`):
+
+* ``"scalar"`` — the original per-tenant Python loop: dict lookups,
+  ``sorted`` arbitration, per-tenant list bookkeeping.  It is the
+  *oracle*: simple enough to audit, kept byte-for-byte decision-
+  compatible.
+* ``"vectorized"`` (default) — structure-of-arrays fleet state
+  (:class:`_FleetState`): per-tenant footprints, targets,
+  pending/denial/deferral flags and per-window attribution live in numpy
+  arrays; arbitration order, fair-share ranking and preemption victim
+  ranking are array programs; admission quotes are cached fleet-wide
+  (one ``bin_pack`` per distinct (query, config) instead of one per
+  tenant per window); and the per-reservation full-sum budget audit
+  becomes one fleet-level invariant check per window.  Decision-
+  identical to the oracle — same denials, deferrals, preemptions, usage
+  series — at thousand-tenant scale.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+
+import numpy as np
 
 from repro.core.controller import AutoScaler, ControllerConfig
 from repro.core.justin import JustinParams
@@ -68,6 +95,14 @@ from repro.scenarios.runner import scenario_horizon_s
 from repro.streaming.engine import StreamEngine
 
 ADMISSION_POLICIES = ("priority", "fair_share", "first_come", "preemption")
+DRIVERS = ("vectorized", "scalar")
+
+# one tolerance for every budget comparison: ``fits``, ``reserve_tasks``
+# and the invariant asserts must agree, or float drift in the summed
+# attribution can deny re-reserving an IDENTICAL footprint that the
+# invariant happily accepts (the post-step resync then dies with a
+# spurious "accounting desync")
+_EPS = 1e-9
 
 
 @dataclass
@@ -77,7 +112,9 @@ class Cluster:
     Usage is tracked per tenant as the *absolute* footprint of that
     tenant's current placement (not deltas), so a reservation is simply
     "replace my footprint with this one" — admitted iff the cluster-wide
-    totals stay within budget.
+    totals stay within budget.  The totals are maintained incrementally
+    (``cpu_in_use`` / ``mem_in_use`` are O(1), not a dict sum), which is
+    what keeps a thousand-tenant window O(N) instead of O(N²).
 
     With ``tm_spec`` set the cluster runs in **shared-TM mode**: tenants
     reserve task lists (:meth:`reserve_tasks`) that are bin-packed into
@@ -93,6 +130,15 @@ class Cluster:
     tasks: dict[str, list[TaskRequest]] = field(default_factory=dict)
     migrations: list[MigrationCost] = field(default_factory=list)
     _placement: SharedPlacement | None = field(default=None, repr=False)
+    _cpu_total: int = field(default=0, init=False, repr=False)
+    _mem_total: float = field(default=0.0, init=False, repr=False)
+
+    def __post_init__(self) -> None:
+        self._recount()
+
+    def _recount(self) -> None:
+        self._cpu_total = sum(self.used_cpu.values())
+        self._mem_total = sum(self.used_mem.values())
 
     # ------------------------------------------------------------- accounting
     @property
@@ -101,21 +147,26 @@ class Cluster:
 
     @property
     def cpu_in_use(self) -> int:
-        return sum(self.used_cpu.values())
+        return self._cpu_total
 
     @property
     def mem_in_use(self) -> float:
-        return sum(self.used_mem.values())
+        return self._mem_total
 
     def available(self) -> tuple[int, float]:
         return (self.cpu_slots - self.cpu_in_use,
                 self.memory_mb - self.mem_in_use)
 
     def fits(self, tenant: str, cpu: int, mem: float) -> bool:
-        """Would replacing ``tenant``'s footprint with (cpu, mem) fit?"""
-        cpu_total = self.cpu_in_use - self.used_cpu.get(tenant, 0) + cpu
-        mem_total = self.mem_in_use - self.used_mem.get(tenant, 0.0) + mem
-        return cpu_total <= self.cpu_slots and mem_total <= self.memory_mb
+        """Would replacing ``tenant``'s footprint with (cpu, mem) fit?
+        Memory is compared with the same ``_EPS`` tolerance the invariant
+        asserts and ``reserve_tasks`` use, so accumulated float drift in
+        the attribution sum can never reject a footprint the invariant
+        would accept."""
+        cpu_total = self._cpu_total - self.used_cpu.get(tenant, 0) + cpu
+        mem_total = self._mem_total - self.used_mem.get(tenant, 0.0) + mem
+        return cpu_total <= self.cpu_slots \
+            and mem_total <= self.memory_mb + _EPS
 
     def reserve(self, tenant: str, cpu: int, mem: float) -> bool:
         """Atomically replace ``tenant``'s footprint; False if it would
@@ -125,10 +176,12 @@ class Cluster:
                             "reserve_tasks, not scalar footprints")
         if not self.fits(tenant, cpu, mem):
             return False
+        self._cpu_total += cpu - self.used_cpu.get(tenant, 0)
+        self._mem_total += mem - self.used_mem.get(tenant, 0.0)
         self.used_cpu[tenant] = cpu
         self.used_mem[tenant] = mem
-        assert self.cpu_in_use <= self.cpu_slots \
-            and self.mem_in_use <= self.memory_mb + 1e-9, "budget overdrawn"
+        assert self._cpu_total <= self.cpu_slots \
+            and self._mem_total <= self.memory_mb + _EPS, "budget overdrawn"
         return True
 
     # ------------------------------------------------------ shared-TM packing
@@ -170,7 +223,7 @@ class Cluster:
         pl, cost = repack(self._trial(tenant, reqs), self.tm_spec,
                           self._placement)
         if pl.cpu_cores > self.cpu_slots \
-                or pl.memory_mb > self.memory_mb + 1e-9:
+                or pl.memory_mb > self.memory_mb + _EPS:
             return False
         self.tasks[tenant] = list(reqs)
         self.migrations.append(cost)
@@ -182,12 +235,13 @@ class Cluster:
         att = pl.attribution()
         self.used_cpu = {t: att.get(t, (0, 0.0))[0] for t in self.tasks}
         self.used_mem = {t: att.get(t, (0, 0.0))[1] for t in self.tasks}
-        assert self.cpu_in_use <= self.cpu_slots \
-            and self.mem_in_use <= self.memory_mb + 1e-9, "budget overdrawn"
+        self._recount()
+        assert self._cpu_total <= self.cpu_slots \
+            and self._mem_total <= self.memory_mb + _EPS, "budget overdrawn"
 
     def release(self, tenant: str) -> None:
-        self.used_cpu.pop(tenant, None)
-        self.used_mem.pop(tenant, None)
+        self._cpu_total -= self.used_cpu.pop(tenant, 0)
+        self._mem_total -= self.used_mem.pop(tenant, 0.0)
         if self.shared and tenant in self.tasks:
             del self.tasks[tenant]
             self._commit_placement(shared_pack(self.tasks, self.tm_spec))
@@ -258,6 +312,11 @@ class ColocatedResult:
     admission: str
     # per-window cluster totals [(cpu_in_use, mem_in_use), ...]
     usage: list = field(default_factory=list)
+    # the vectorized driver's structure-of-arrays state (None under the
+    # scalar oracle): per-window denial/deferral/preemption flags and
+    # attribution as (windows, tenants) numpy arrays — what fleet-scale
+    # consumers reduce over without touching per-tenant lists
+    fleet: "_FleetState | None" = None
 
     def tenant(self, name: str) -> TenantRun:
         for t in self.tenants:
@@ -303,52 +362,83 @@ def _arbitration_order(tenants: list[TenantRun], cluster: Cluster,
                      f"(have: {', '.join(ADMISSION_POLICIES)})")
 
 
-def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
-                  *, windows: int = 8, seed: int = 3, max_level: int = 2,
-                  admission: str = "priority",
-                  cfg: ControllerConfig | None = None,
-                  warm: bool = True,
-                  reconfig_cost="instant",
-                  migration_budget_mb: float | None = None
-                  ) -> ColocatedResult:
-    """Step every episode through ``windows`` decision windows in lockstep,
-    arbitrating each window's scale-up requests against ``cluster``'s
-    remaining budget.
+# ---------------------------------------------------------------------------
+# Driver-shared plumbing
+# ---------------------------------------------------------------------------
 
-    ``specs`` entries may be :class:`ColocatedSpec` or bare
-    ``(policy, query)`` / ``(policy, query, profile)`` tuples.  ``cfg`` is a
-    *template* shared by every tenant; each tenant's policy is constructed
-    from the registry by its spec's name (any registered policy works, not
-    just ds2/justin).  Episodes whose *initial* placement already exceeds
-    the budget raise — a cluster that cannot hold the starting
-    configurations is a sizing error, not an admission decision.
+def _reserve(cluster: Cluster, t: TenantRun, config: dict | None = None,
+             cpu: int | None = None, mem: float | None = None) -> bool:
+    """Replace ``t``'s cluster footprint: its task list under ``config``
+    (shared-TM mode) or the scalar (cpu, mem) quote."""
+    if cluster.shared:
+        return cluster.reserve_tasks(t.name, t.scaler.task_requests(config))
+    if cpu is None:
+        cpu, mem = t.scaler.resources()
+    return cluster.reserve(t.name, cpu, mem)
 
-    With ``admission="preemption"`` the spec list is the priority order
-    for *requests*; victims are selected fair-share (see module
-    docstring).  On a shared-TM cluster, footprints are task lists packed
-    into one fleet and history rows carry each tenant's amortized
-    attribution (``amortized_mb``).
 
-    ``reconfig_cost`` (a mechanism name or
-    :class:`repro.migration.CostModel`) attaches a migration runtime to
-    every tenant: reconfigurations pause the tenant's engine for their
-    priced downtime.  ``migration_budget_mb`` caps the state MB the
-    arbiter lets *admissions* move per window, across all tenants: a
-    quoted admission whose migration cost would blow the remaining
-    window budget is deferred — the ordinary denial/retry path, recorded
-    additionally in ``TenantRun.deferrals``.  (On private-fleet clusters
-    the quote comes from the migration planner over the tenant's own
-    placements; on shared-TM clusters from the fleet repack.)
-    """
-    if admission not in ADMISSION_POLICIES:
-        raise ValueError(f"unknown admission policy {admission!r} "
-                         f"(have: {', '.join(ADMISSION_POLICIES)})")
-    from repro.migration import CostModel, MigrationRuntime
-    cost_model = reconfig_cost if isinstance(reconfig_cost, CostModel) \
-        else CostModel(mechanism=reconfig_cost)
-    specs = [s if isinstance(s, ColocatedSpec) else ColocatedSpec(*s)
-             for s in specs]
-    base = cfg or ControllerConfig(justin=JustinParams(max_level=max_level))
+def _cfg_key(config: dict) -> tuple:
+    return tuple(sorted(config.items()))
+
+
+def _migration_quote(cluster: Cluster, base: ControllerConfig, t: TenantRun,
+                     config: dict | None, cache: dict | None = None) -> float:
+    """State MB ``t``'s reservation would move — the migration-budget
+    currency.  Fleet-level repack cost on shared-TM clusters; the
+    migration planner over the tenant's own placements otherwise (a pure
+    function of (query, policy, old config, new config), which is what
+    the vectorized driver's fleet-wide ``cache`` keys on)."""
+    if cluster.shared:
+        return cluster.quote_migration(
+            t.name, t.scaler.task_requests(config)).state_mb
+    from repro.core.placement import bin_pack, default_tm_spec
+    from repro.migration import plan_migration
+    key = None
+    if cache is not None:
+        key = (t.spec.query, t.scaler.policy.name,
+               _cfg_key(t.scaler.flow.config()),
+               _cfg_key(config if config is not None
+                        else t.scaler.flow.config()))
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+    spec = default_tm_spec(base.base_mem_mb)
+    old_pl = bin_pack(t.scaler.task_requests(), spec)
+    new_pl = bin_pack(t.scaler.task_requests(config), spec)
+    out = plan_migration(old_pl, new_pl).migration_cost().state_mb
+    if cache is not None:
+        cache[key] = out
+    return out
+
+
+def _footprint_shrank(cluster: Cluster, t: TenantRun) -> bool:
+    """Is ``t``'s current task list no larger (slots and managed MB)
+    than the one the cluster holds for it?"""
+    old = cluster.tasks.get(t.name, [])
+    new = t.scaler.task_requests()
+    return (len(new) <= len(old)
+            and sum(r.memory_mb for r in new)
+            <= sum(r.memory_mb for r in old) + _EPS)
+
+
+def _desync_error(cluster: Cluster, t: TenantRun, cpu_now: int,
+                  mem_now: float) -> RuntimeError:
+    return RuntimeError(
+        f"cluster accounting desync: {t.name}'s enacted "
+        f"placement ({cpu_now} slots, {mem_now:.0f} MB) does "
+        f"not fit the budget its quoted admission passed "
+        f"({cluster.cpu_slots} slots, "
+        f"{cluster.memory_mb:.0f} MB, "
+        f"{cluster.cpu_in_use - cluster.used_cpu.get(t.name, 0)}"
+        f" slots/"
+        f"{cluster.mem_in_use - cluster.used_mem.get(t.name, 0.0):.0f}"
+        f" MB held by neighbors)")
+
+
+def _setup_tenants(specs, cluster: Cluster, *, windows: int, seed: int,
+                   base: ControllerConfig, warm: bool,
+                   cost_model) -> list[TenantRun]:
+    from repro.migration import MigrationRuntime
     tenants: list[TenantRun] = []
     names: set[str] = set()
     for spec in specs:
@@ -382,71 +472,60 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
         tenants.append(TenantRun(spec=spec, name=name, scaler=scaler,
                                  profile=profile, faults=faults))
 
-    prio = {t.name: i for i, t in enumerate(tenants)}
-
-    def _reserve(t: TenantRun, config: dict | None = None,
-                 cpu: int | None = None, mem: float | None = None) -> bool:
-        """Replace ``t``'s cluster footprint: its task list under ``config``
-        (shared-TM mode) or the scalar (cpu, mem) quote."""
-        if cluster.shared:
-            return cluster.reserve_tasks(t.name,
-                                         t.scaler.task_requests(config))
-        if cpu is None:
-            cpu, mem = t.scaler.resources()
-        return cluster.reserve(t.name, cpu, mem)
-
-    def _migration_quote(t: TenantRun, config: dict | None) -> float:
-        """State MB ``t``'s reservation would move — the migration-budget
-        currency.  Fleet-level repack cost on shared-TM clusters; the
-        migration planner over the tenant's own placements otherwise."""
-        if cluster.shared:
-            return cluster.quote_migration(
-                t.name, t.scaler.task_requests(config)).state_mb
-        from repro.core.placement import bin_pack, default_tm_spec
-        from repro.migration import plan_migration
-        spec = default_tm_spec(base.base_mem_mb)
-        old_pl = bin_pack(t.scaler.task_requests(), spec)
-        new_pl = bin_pack(t.scaler.task_requests(config), spec)
-        return plan_migration(old_pl, new_pl).migration_cost().state_mb
-
-    def _footprint_shrank(t: TenantRun) -> bool:
-        """Is ``t``'s current task list no larger (slots and managed MB)
-        than the one the cluster holds for it?"""
-        old = cluster.tasks.get(t.name, [])
-        new = t.scaler.task_requests()
-        return (len(new) <= len(old)
-                and sum(r.memory_mb for r in new)
-                <= sum(r.memory_mb for r in old) + 1e-9)
-
     # initial placements must fit — this is cluster sizing, not admission
     for t in tenants:
-        if not _reserve(t):
+        if not _reserve(cluster, t):
             cpu0, mem0 = t.scaler.resources()
             raise ValueError(
                 f"cluster {cluster.cpu_slots} slots/{cluster.memory_mb} MB "
                 f"cannot hold {t.name}'s initial placement "
                 f"({cpu0} slots, {mem0} MB)")
+    return tenants
 
-    result = ColocatedResult(cluster=cluster, tenants=tenants,
-                             admission=admission)
+
+# ---------------------------------------------------------------------------
+# Scalar driver — the oracle
+# ---------------------------------------------------------------------------
+
+def _run_scalar(tenants: list[TenantRun], cluster: Cluster,
+                result: ColocatedResult, *, windows: int, admission: str,
+                migration_budget_mb: float | None,
+                base: ControllerConfig) -> ColocatedResult:
+    """The original per-tenant Python loop: dict snapshots, ``sorted``
+    arbitration, per-tenant list bookkeeping.  Kept as the simple,
+    auditable oracle the vectorized driver is equivalence-tested
+    against."""
+    prio = {t.name: i for i, t in enumerate(tenants)}
 
     def _preempt_for(requester: TenantRun, new_config: dict, cpu, mem,
-                     w: int) -> bool:
+                     w: int, budget_left: float | None
+                     ) -> tuple[bool, float, bool]:
         """Fair-share victim selection: force give-backs from tenants
         holding MORE than their fair allotment of the budget (1/N of the
         max of CPU and memory fractions), biggest excess first, spec
         priority breaking ties (lower-priority tenants shrink first).
         One level at a time, re-ranking after every give-back (shares
         move), until the requester's reservation fits or no
-        over-allotment tenant can shrink.  Returns admission success;
-        every give-back is recorded on the victim.
+        over-allotment tenant can shrink.  Every give-back is recorded
+        on the victim.
 
         Unlike strict-priority victim selection, a tenant sitting at or
         below its fair share is never preempted — and a hog above its
         allotment is reclaimable even by a lower-priority requester.
+
+        Under a migration budget, give-backs are migrations too: each is
+        quoted before enactment and charged against the window's
+        remaining allowance (an unaffordable give-back is skipped —
+        blocked, not exhausted), and once the fleet has been re-shaped
+        the requester's own move is re-quoted at the post-preemption
+        price.  Returns ``(admitted, state MB charged, blocked)`` —
+        ``blocked`` marks a request the budget (not capacity) turned
+        away, the driver's deferral signal.
         """
         fair = 1.0 / max(len(tenants), 1)
         exhausted: set[str] = set()
+        spent = 0.0
+        blocked = False
         while True:
             victims = [v for v in tenants
                        if v is not requester and v.name not in exhausted
@@ -459,6 +538,13 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
                 if prop is None or prop.config == sc.flow.config():
                     exhausted.add(victim.name)   # nothing left to give back
                     continue
+                gb_mb = 0.0
+                if budget_left is not None:
+                    gb_mb = _migration_quote(cluster, base, victim,
+                                             prop.config)
+                    if gb_mb > budget_left - spent + _EPS:
+                        blocked = True   # this victim's give-back moves
+                        continue         # more than the window has left
                 # FFD packing is non-monotone (see tests/test_placement.py
                 # ::test_ffd_packing_is_non_monotone): a shrunk task list
                 # can pack into a LARGER fleet.  Quote the give-back
@@ -482,11 +568,22 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
                 if not cluster.shared:
                     freed = cluster.reserve(victim.name, *shrunk)
                     assert freed            # same quote fits() passed above
-                if _reserve(requester, new_config, cpu, mem):
-                    return True
+                spent += gb_mb
+                if budget_left is not None:
+                    # the give-backs re-shaped the fleet: the requester's
+                    # own move costs the post-preemption price, not the
+                    # stale quote taken before victims shrank
+                    req_mb = _migration_quote(cluster, base, requester,
+                                              new_config)
+                    if req_mb > budget_left - spent + _EPS:
+                        return False, spent, True
+                else:
+                    req_mb = 0.0
+                if _reserve(cluster, requester, new_config, cpu, mem):
+                    return True, spent + req_mb, False
                 break               # shares moved: re-rank the victims
             else:
-                return False        # no over-allotment tenant can shrink
+                return False, spent, blocked
 
     for w in range(windows):
         # the attribution backing the configs that RUN during this window
@@ -505,23 +602,34 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
                     # a quoted admission whose migration cost exceeds the
                     # window's remaining budget is DEFERRED — the normal
                     # denial/retry path, additionally marked a deferral
-                    quote_mb = _migration_quote(_t, new_config)
-                    if quote_mb > budget_left + 1e-9:
+                    quote_mb = _migration_quote(cluster, base, _t,
+                                                new_config)
+                    if quote_mb > budget_left + _EPS:
                         _t.deferrals.append(_w)
                         _t.denials.append(_w)
                         if _t.first_pending is None:
                             _t.first_pending = _w
                         return False
-                ok = _reserve(_t, new_config, cpu, mem)
-                if not ok and admission == "preemption":
-                    ok = _preempt_for(_t, new_config, cpu, mem, _w)
-                if not ok:
-                    _t.denials.append(_w)
-                    if _t.first_pending is None:
-                        _t.first_pending = _w
-                elif budget_left is not None:
-                    budget_left -= quote_mb
-                return ok
+                ok = _reserve(cluster, _t, new_config, cpu, mem)
+                if ok:
+                    if budget_left is not None:
+                        budget_left -= quote_mb
+                    return True
+                if admission == "preemption":
+                    ok, spent, blocked = _preempt_for(
+                        _t, new_config, cpu, mem, _w, budget_left)
+                    if budget_left is not None:
+                        # give-backs moved state whether or not the
+                        # request ultimately landed
+                        budget_left -= spent
+                    if ok:
+                        return True
+                    if blocked:
+                        _t.deferrals.append(_w)
+                _t.denials.append(_w)
+                if _t.first_pending is None:
+                    _t.first_pending = _w
+                return False
 
             def hook(eng, _w, _t=t):
                 if _t.faults is not None:
@@ -540,24 +648,16 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
             # invariant violation, never a legitimate denial, so fail
             # loudly.
             cpu_now, mem_now = t.scaler.resources()
-            if not _reserve(t, None, cpu_now, mem_now) \
-                    and not (cluster.shared and _footprint_shrank(t)):
+            if not _reserve(cluster, t, None, cpu_now, mem_now) \
+                    and not (cluster.shared and _footprint_shrank(cluster,
+                                                                  t)):
                 # (a shared-TM resync of a footprint that SHRANK may be
                 # denied by FFD non-monotonicity — a smaller task list
                 # repacking into a larger fleet; the previous, larger
                 # reservation stays standing, which never under-states
                 # the tenant and is corrected at its next successful
                 # reservation)
-                raise RuntimeError(
-                    f"cluster accounting desync: {t.name}'s enacted "
-                    f"placement ({cpu_now} slots, {mem_now:.0f} MB) does "
-                    f"not fit the budget its quoted admission passed "
-                    f"({cluster.cpu_slots} slots, "
-                    f"{cluster.memory_mb:.0f} MB, "
-                    f"{cluster.cpu_in_use - cluster.used_cpu.get(t.name, 0)}"
-                    f" slots/"
-                    f"{cluster.mem_in_use - cluster.used_mem.get(t.name, 0.0):.0f}"
-                    f" MB held by neighbors)")
+                raise _desync_error(cluster, t, cpu_now, mem_now)
             if not t.history[-1].denied:
                 t.first_pending = None
         for t in tenants:
@@ -566,3 +666,341 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
             row.preempted = w in t.preemptions
         result.usage.append((cluster.cpu_in_use, cluster.mem_in_use))
     return result
+
+
+# ---------------------------------------------------------------------------
+# Vectorized driver — structure-of-arrays fleet state
+# ---------------------------------------------------------------------------
+
+class _FleetState:
+    """Structure-of-arrays tenant state for the vectorized fleet driver.
+
+    Per-tenant scalars the scalar oracle keeps in dicts and Python lists
+    live here as numpy arrays indexed by spec order:
+
+    * ``used_cpu`` / ``used_mem`` — each tenant's current cluster
+      attribution (mirrors ``Cluster.used_cpu/used_mem``; maintained
+      incrementally on private clusters, refreshed from the dicts after
+      shared-TM repacks rewrite everyone's attribution);
+    * ``targets`` — each tenant's current target rate;
+    * ``first_pending`` — window of the oldest unserved request
+      (−1 ≡ none), the ``first_come`` age key;
+    * ``denied`` / ``deferred`` / ``preempted`` — (windows, tenants)
+      per-window outcome flags;
+    * ``attributed`` — (windows, tenants) start-of-window memory
+      attribution (what ``HistoryRow.amortized_mb`` reports).
+
+    Arbitration order, fair-share ranking and preemption victim ranking
+    are array programs over this state — stable sorts chosen to be
+    order-identical to the oracle's ``sorted`` calls.
+    """
+
+    def __init__(self, tenants: list[TenantRun], cluster: Cluster,
+                 windows: int):
+        n = len(tenants)
+        self.tenants = tenants
+        self.cluster = cluster
+        self.n = n
+        self.names = [t.name for t in tenants]
+        self.used_cpu = np.zeros(n, dtype=np.int64)
+        self.used_mem = np.zeros(n, dtype=np.float64)
+        self.targets = np.zeros(n, dtype=np.float64)
+        self.first_pending = np.full(n, -1, dtype=np.int64)
+        self.denied = np.zeros((windows, n), dtype=bool)
+        self.deferred = np.zeros((windows, n), dtype=bool)
+        self.preempted = np.zeros((windows, n), dtype=bool)
+        self.attributed = np.zeros((windows, n), dtype=np.float64)
+        self.refresh()
+
+    def refresh(self) -> None:
+        """Pull every tenant's attribution from the cluster dicts into
+        the arrays — needed after shared-TM repacks, which rewrite all
+        co-residents' amortized shares at once."""
+        uc, um = self.cluster.used_cpu, self.cluster.used_mem
+        self.used_cpu[:] = np.fromiter((uc.get(nm, 0) for nm in self.names),
+                                       np.int64, self.n)
+        self.used_mem[:] = np.fromiter(
+            (um.get(nm, 0.0) for nm in self.names), np.float64, self.n)
+
+    def set_footprint(self, i: int) -> None:
+        """Mirror one tenant's cluster attribution into the arrays (the
+        private-cluster incremental path: a reserve touches one row)."""
+        name = self.names[i]
+        self.used_cpu[i] = self.cluster.used_cpu.get(name, 0)
+        self.used_mem[i] = self.cluster.used_mem.get(name, 0.0)
+
+    def shares(self) -> np.ndarray:
+        """Every tenant's budget share at once — elementwise the same
+        arithmetic as ``Cluster.share`` so the two drivers rank
+        identically."""
+        return np.maximum(
+            self.used_cpu / max(self.cluster.cpu_slots, 1),
+            self.used_mem / max(self.cluster.memory_mb, 1e-9))
+
+    def order(self, admission: str) -> np.ndarray:
+        """This window's arbitration order as tenant indices — the
+        vectorized ``_arbitration_order``.  Stable sorts keep ties in
+        spec order, exactly like the oracle's Timsort."""
+        if admission in ("priority", "preemption"):
+            return np.arange(self.n)
+        if self.cluster.shared:
+            self.refresh()
+        if admission == "fair_share":
+            return np.argsort(self.shares(), kind="stable")
+        if admission == "first_come":
+            fp = self.first_pending
+            served = fp < 0
+            # sorted(key=(t.first_pending is None, t.first_pending or 0))
+            return np.lexsort((np.where(served, 0, fp), served))
+        raise ValueError(f"unknown admission policy {admission!r} "
+                         f"(have: {', '.join(ADMISSION_POLICIES)})")
+
+    def rank_victims(self, req_idx: int, fair: float,
+                     exhausted: np.ndarray) -> np.ndarray:
+        """Preemption victim ranking: tenants over their fair allotment,
+        biggest excess first, spec priority breaking ties (larger index
+        = lower priority = shrinks first) — the vectorized form of the
+        oracle's ``sort(key=(fair - share, -prio))``."""
+        if self.cluster.shared:
+            self.refresh()
+        sh = self.shares()
+        mask = (sh > fair) & ~exhausted
+        mask[req_idx] = False
+        idx = np.nonzero(mask)[0]
+        if idx.size:
+            idx = idx[np.lexsort((-idx, fair - sh[idx]))]
+        return idx
+
+
+def _run_vectorized(tenants: list[TenantRun], cluster: Cluster,
+                    result: ColocatedResult, *, windows: int, admission: str,
+                    migration_budget_mb: float | None,
+                    base: ControllerConfig) -> ColocatedResult:
+    """The fleet driver: batches each window's bookkeeping across tenants
+    (ordering, ranking, flags, attribution as array programs), caches
+    admission quotes fleet-wide, and audits the budget once per window —
+    decision-identical to :func:`_run_scalar` (see
+    tests/test_fleet.py)."""
+    fleet = _FleetState(tenants, cluster, windows)
+    result.fleet = fleet
+    # admission quotes are pure functions of (query, transformed config)
+    # on private clusters: one cache shared by the whole fleet turns N
+    # bin_packs per window into one per DISTINCT configuration.  (Shared
+    # TM quotes depend on every co-resident's task list — uncacheable.)
+    if not cluster.shared:
+        quote_cache: dict = {}
+        mig_cache: dict | None = {}
+        for t in tenants:
+            t.scaler.quote_cache = quote_cache
+    else:
+        mig_cache = None
+
+    def _preempt_for(requester: TenantRun, req_idx: int, new_config: dict,
+                     cpu, mem, w: int, budget_left: float | None
+                     ) -> tuple[bool, float, bool]:
+        """Same state machine as the oracle's ``_preempt_for`` (see
+        :func:`_run_scalar` for the full commentary); victim ranking and
+        preemption marks go through the fleet arrays."""
+        fair = 1.0 / max(fleet.n, 1)
+        exhausted = np.zeros(fleet.n, dtype=bool)
+        spent = 0.0
+        blocked = False
+        while True:
+            for vi in fleet.rank_victims(req_idx, fair, exhausted):
+                vi = int(vi)
+                victim = tenants[vi]
+                sc = victim.scaler
+                prop = sc.policy.propose_shrink(sc.flow, sc.cfg)
+                if prop is None or prop.config == sc.flow.config():
+                    exhausted[vi] = True
+                    continue
+                gb_mb = 0.0
+                if budget_left is not None:
+                    gb_mb = _migration_quote(cluster, base, victim,
+                                             prop.config, mig_cache)
+                    if gb_mb > budget_left - spent + _EPS:
+                        blocked = True
+                        continue
+                if cluster.shared:
+                    if not cluster.reserve_tasks(
+                            victim.name, sc.task_requests(prop.config)):
+                        continue
+                elif not cluster.fits(victim.name,
+                                      *sc.resources(prop.config)):
+                    continue
+                shrunk = sc.shrink_memory()
+                assert shrunk is not None
+                fleet.preempted[w, vi] = True
+                if not cluster.shared:
+                    freed = cluster.reserve(victim.name, *shrunk)
+                    assert freed
+                    fleet.set_footprint(vi)
+                spent += gb_mb
+                if budget_left is not None:
+                    req_mb = _migration_quote(cluster, base, requester,
+                                              new_config, mig_cache)
+                    if req_mb > budget_left - spent + _EPS:
+                        return False, spent, True
+                else:
+                    req_mb = 0.0
+                if _reserve(cluster, requester, new_config, cpu, mem):
+                    return True, spent + req_mb, False
+                break               # shares moved: re-rank the victims
+            else:
+                return False, spent, blocked
+
+    for w in range(windows):
+        # start-of-window attribution snapshot — one array copy instead
+        # of the oracle's dict(cluster.used_mem)
+        fleet.attributed[w, :] = fleet.used_mem
+        budget_left = migration_budget_mb     # per-window allowance
+        for i in fleet.order(admission):
+            i = int(i)
+            t = tenants[i]
+
+            def admit(scaler, new_config, cpu, mem, _t=t, _i=i, _w=w):
+                nonlocal budget_left
+                quote_mb = 0.0
+                if budget_left is not None:
+                    quote_mb = _migration_quote(cluster, base, _t,
+                                                new_config, mig_cache)
+                    if quote_mb > budget_left + _EPS:
+                        fleet.deferred[_w, _i] = True
+                        fleet.denied[_w, _i] = True
+                        if fleet.first_pending[_i] < 0:
+                            fleet.first_pending[_i] = _w
+                        return False
+                ok = _reserve(cluster, _t, new_config, cpu, mem)
+                if ok:
+                    fleet.set_footprint(_i)
+                    if budget_left is not None:
+                        budget_left -= quote_mb
+                    return True
+                if admission == "preemption":
+                    ok, spent, blocked = _preempt_for(
+                        _t, _i, new_config, cpu, mem, _w, budget_left)
+                    if budget_left is not None:
+                        budget_left -= spent
+                    if ok:
+                        fleet.set_footprint(_i)
+                        return True
+                    if blocked:
+                        fleet.deferred[_w, _i] = True
+                fleet.denied[_w, _i] = True
+                if fleet.first_pending[_i] < 0:
+                    fleet.first_pending[_i] = _w
+                return False
+
+            def hook(eng, _w, _t=t):
+                if _t.faults is not None:
+                    _t.faults_fired.extend(
+                        _t.faults.apply_due(eng, eng.now))
+
+            t.scaler.admission = admit
+            t.scaler.step_window(w, target_profile=t.profile,
+                                 window_hook=hook)
+            cpu_now, mem_now = t.scaler.resources()
+            if not _reserve(cluster, t, None, cpu_now, mem_now) \
+                    and not (cluster.shared and _footprint_shrank(cluster,
+                                                                  t)):
+                raise _desync_error(cluster, t, cpu_now, mem_now)
+            fleet.set_footprint(i)
+            fleet.targets[i] = t.scaler.target
+            if not t.history[-1].denied:
+                fleet.first_pending[i] = -1
+        # ONE fleet-level budget audit per window (each Cluster.reserve
+        # already asserts the O(1) running totals; this checks the
+        # per-tenant array mirror still sums to them)
+        if cluster.shared:
+            fleet.refresh()
+        assert int(fleet.used_cpu.sum()) == cluster.cpu_in_use \
+            and abs(float(fleet.used_mem.sum())
+                    - cluster.mem_in_use) <= 1e-6 \
+            and cluster.cpu_in_use <= cluster.cpu_slots \
+            and cluster.mem_in_use <= cluster.memory_mb + _EPS, \
+            "fleet accounting desync"
+        for j, t in enumerate(tenants):
+            row = t.history[-1]
+            row.amortized_mb = float(fleet.attributed[w, j])
+            row.preempted = bool(fleet.preempted[w, j])
+        result.usage.append((cluster.cpu_in_use, cluster.mem_in_use))
+
+    # fold the array flags back into the per-tenant lists the scalar API
+    # (and every existing consumer) reads
+    for j, t in enumerate(tenants):
+        t.denials = [int(x) for x in np.nonzero(fleet.denied[:, j])[0]]
+        t.deferrals = [int(x) for x in np.nonzero(fleet.deferred[:, j])[0]]
+        t.preemptions = [int(x) for x in np.nonzero(fleet.preempted[:, j])[0]]
+        fp = int(fleet.first_pending[j])
+        t.first_pending = None if fp < 0 else fp
+        t.scaler.quote_cache = None
+    return result
+
+
+def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
+                  *, windows: int = 8, seed: int = 3, max_level: int = 2,
+                  admission: str = "priority",
+                  cfg: ControllerConfig | None = None,
+                  warm: bool = True,
+                  reconfig_cost="instant",
+                  migration_budget_mb: float | None = None,
+                  driver: str = "vectorized"
+                  ) -> ColocatedResult:
+    """Step every episode through ``windows`` decision windows in lockstep,
+    arbitrating each window's scale-up requests against ``cluster``'s
+    remaining budget.
+
+    ``specs`` entries may be :class:`ColocatedSpec` or bare
+    ``(policy, query)`` / ``(policy, query, profile)`` tuples.  ``cfg`` is a
+    *template* shared by every tenant; each tenant's policy is constructed
+    from the registry by its spec's name (any registered policy works, not
+    just ds2/justin).  Episodes whose *initial* placement already exceeds
+    the budget raise — a cluster that cannot hold the starting
+    configurations is a sizing error, not an admission decision.
+
+    With ``admission="preemption"`` the spec list is the priority order
+    for *requests*; victims are selected fair-share (see module
+    docstring).  On a shared-TM cluster, footprints are task lists packed
+    into one fleet and history rows carry each tenant's amortized
+    attribution (``amortized_mb``).
+
+    ``reconfig_cost`` (a mechanism name or
+    :class:`repro.migration.CostModel`) attaches a migration runtime to
+    every tenant: reconfigurations pause the tenant's engine for their
+    priced downtime.  ``migration_budget_mb`` caps the state MB the
+    arbiter lets *admissions* move per window, across all tenants: a
+    quoted admission whose migration cost would blow the remaining
+    window budget is deferred — the ordinary denial/retry path, recorded
+    additionally in ``TenantRun.deferrals``.  Preemption give-backs are
+    migrations too: they are quoted and charged against the same window
+    allowance, and the requester is re-quoted after the give-backs
+    re-shape the fleet.  (On private-fleet clusters the quote comes from
+    the migration planner over the tenant's own placements; on shared-TM
+    clusters from the fleet repack.)
+
+    ``driver`` selects the fleet stepping implementation:
+    ``"vectorized"`` (default) batches per-window bookkeeping across
+    tenants as numpy array programs and scales to thousand-tenant
+    fleets; ``"scalar"`` is the original per-tenant loop, kept as the
+    decision-identical oracle.
+    """
+    if admission not in ADMISSION_POLICIES:
+        raise ValueError(f"unknown admission policy {admission!r} "
+                         f"(have: {', '.join(ADMISSION_POLICIES)})")
+    if driver not in DRIVERS:
+        raise ValueError(f"unknown driver {driver!r} "
+                         f"(have: {', '.join(DRIVERS)})")
+    from repro.migration import CostModel
+    cost_model = reconfig_cost if isinstance(reconfig_cost, CostModel) \
+        else CostModel(mechanism=reconfig_cost)
+    specs = [s if isinstance(s, ColocatedSpec) else ColocatedSpec(*s)
+             for s in specs]
+    base = cfg or ControllerConfig(justin=JustinParams(max_level=max_level))
+    tenants = _setup_tenants(specs, cluster, windows=windows, seed=seed,
+                             base=base, warm=warm, cost_model=cost_model)
+    result = ColocatedResult(cluster=cluster, tenants=tenants,
+                             admission=admission)
+    run = _run_vectorized if driver == "vectorized" else _run_scalar
+    return run(tenants, cluster, result, windows=windows,
+               admission=admission,
+               migration_budget_mb=migration_budget_mb, base=base)

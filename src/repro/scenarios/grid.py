@@ -47,6 +47,7 @@ def run_colocation(queries=None, admission: str = "preemption", *,
                    slack: float = DEFAULT_SLACK,
                    reconfig_cost: str = "instant",
                    migration_budget_mb: float | None = None,
+                   driver: str = "vectorized",
                    verbose: bool = True) -> list[dict]:
     """Per query: the ds2/justin pair competing on ONE shared-TM cluster
     under ``admission`` (ds2 is the higher-priority tenant, so under
@@ -86,7 +87,8 @@ def run_colocation(queries=None, admission: str = "preemption", *,
         res = run_colocated(specs, cluster, windows=windows, seed=seed,
                             admission=admission, cfg=cfg,
                             reconfig_cost=reconfig_cost,
-                            migration_budget_mb=migration_budget_mb)
+                            migration_budget_mb=migration_budget_mb,
+                            driver=driver)
         # both integrals quote the config running during each window:
         # private fleets vs the tenant's amortized shared-TM attribution
         shared_mb_w = sum(t.slo(slack).amortized_mb_windows
@@ -127,7 +129,8 @@ def run_grid(queries=None, profiles=None, policies=None, *,
              admission: str | None = None, windows_colocated: int = 5,
              cluster_slots: int = 0, cluster_mb: float = 0.0,
              reconfig_cost: str = "instant",
-             migration_budget_mb: float | None = None) -> dict:
+             migration_budget_mb: float | None = None,
+             driver: str = "vectorized") -> dict:
     """Run the full grid; returns ``{"cells": [...], "meta": {...}}`` where
     each cell is one (policy, query, profile) episode's summary + SLO
     scorecard.  ``policies`` defaults to every registered policy.  With
@@ -178,7 +181,8 @@ def run_grid(queries=None, profiles=None, policies=None, *,
             max_level=max_level, cpu_slots=cluster_slots,
             memory_mb=cluster_mb, slack=slack,
             reconfig_cost=reconfig_cost,
-            migration_budget_mb=migration_budget_mb, verbose=verbose)
+            migration_budget_mb=migration_budget_mb, driver=driver,
+            verbose=verbose)
     return out
 
 

@@ -99,10 +99,14 @@ def catch_up_episodes(history: list, slack: float = DEFAULT_SLACK,
 
 def _mean_window_s(history: list) -> float:
     """Mean decision-window spacing of a history (row timestamps are
-    window-end times; a single row's spacing is its time since start)."""
+    window-end times).  A single row carries no spacing information —
+    its ``t`` is the episode's absolute start offset, NOT a window span,
+    and returning it inflated a 1-window open-ended violation's catch-up
+    to its onset time — so the spacing degrades to 0 rather than
+    guessing."""
     if len(history) > 1:
         return (history[-1].t - history[0].t) / (len(history) - 1)
-    return history[0].t if history else 0.0
+    return 0.0
 
 
 def catch_up_time_s(history: list, slack: float = DEFAULT_SLACK,

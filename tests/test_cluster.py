@@ -90,7 +90,8 @@ def quick_cfg():
                             justin=JustinParams(max_level=2))
 
 
-def run_pair(first_policy: str, windows: int = 5):
+def run_pair(first_policy: str, windows: int = 5,
+             driver: str = "vectorized"):
     """Two q1 tenants on a cluster sized so both fit only if the first
     tenant scales the Justin way (no managed grant on stateless tasks):
     ds2 needs 4096 MB at its final config, justin 2832 MB, budget 7000."""
@@ -98,7 +99,7 @@ def run_pair(first_policy: str, windows: int = 5):
     res = run_colocated(
         [ColocatedSpec(first_policy, "q1", name="A"),
          ColocatedSpec("ds2", "q1", name="B")],
-        cluster, windows=windows, cfg=quick_cfg())
+        cluster, windows=windows, cfg=quick_cfg(), driver=driver)
     return res
 
 
@@ -249,15 +250,19 @@ def test_shared_tm_strictly_cheaper_than_private_fleets():
                for t in res.tenants) >= 2
 
 
-def preemption_pair(admission: str, windows: int = 5):
+def preemption_pair(admission: str, windows: int = 5,
+                    driver: str = "vectorized", tm_spec=None,
+                    migration_budget_mb=None):
     """The pinned §4.3 scenario: a static low-priority tenant pinned at
     storage level 2 holds the memory a high-priority DS2 tenant needs."""
     specs = [ColocatedSpec("ds2", "q1", name="H"),
              ColocatedSpec("static", "q11", name="V", target=5_000,
                            config={"user_sessions": (6, 2)})]
-    return run_colocated(specs, Cluster(cpu_slots=16, memory_mb=8500.0),
+    return run_colocated(specs, Cluster(cpu_slots=16, memory_mb=8500.0,
+                                        tm_spec=tm_spec),
                          windows=windows, cfg=quick_cfg(),
-                         admission=admission)
+                         admission=admission, driver=driver,
+                         migration_budget_mb=migration_budget_mb)
 
 
 def test_fair_share_preemption_reclaims_over_allotment_hog():
@@ -314,3 +319,100 @@ def test_preemption_admits_what_priority_starves():
     # the admitted tenant actually got the capacity it was starved of
     assert h2.history[-1].cpu_cores > h.history[-1].cpu_cores
     assert freed.summary()["tenants"]["V"]["preempted_windows"] == [0, 1]
+
+
+# ------------------------------------------------- vectorized fleet driver
+def assert_drivers_identical(res_v, res_s):
+    """Every observable decision must match between the vectorized driver
+    and the scalar oracle: per-window usage, per-tenant admission
+    outcomes, and the full history series."""
+    assert [t.name for t in res_v.tenants] == [t.name for t in res_s.tenants]
+    assert res_v.usage == res_s.usage
+    for tv, ts in zip(res_v.tenants, res_s.tenants):
+        assert tv.denials == ts.denials, tv.name
+        assert tv.deferrals == ts.deferrals, tv.name
+        assert tv.preemptions == ts.preemptions, tv.name
+        assert tv.first_pending == ts.first_pending, tv.name
+        assert tv.faults_fired == ts.faults_fired, tv.name
+        assert tv.scaler.preemptions == ts.scaler.preemptions, tv.name
+        assert len(tv.history) == len(ts.history), tv.name
+        for hv, hs in zip(tv.history, ts.history):
+            assert (hv.cpu_cores, hv.memory_mb, hv.denied,
+                    getattr(hv, "preempted", False),
+                    getattr(hv, "amortized_mb", None)) \
+                == (hs.cpu_cores, hs.memory_mb, hs.denied,
+                    getattr(hs, "preempted", False),
+                    getattr(hs, "amortized_mb", None)), tv.name
+
+
+def test_scalar_oracle_matches_vectorized_on_pr2_headline():
+    """The PR 2 acceptance headline must be decision-identical under both
+    drivers — same denials, same usage curve, same histories."""
+    for policy in ("justin", "ds2"):
+        assert_drivers_identical(run_pair(policy, driver="vectorized"),
+                                 run_pair(policy, driver="scalar"))
+
+
+def test_scalar_oracle_matches_vectorized_on_pr4_headline():
+    """The PR 4 preemption headline, both drivers, all admission modes."""
+    for admission in ("priority", "fair_share", "first_come", "preemption"):
+        assert_drivers_identical(
+            preemption_pair(admission, driver="vectorized"),
+            preemption_pair(admission, driver="scalar"))
+
+
+def test_run_colocated_rejects_unknown_driver():
+    with pytest.raises(ValueError, match="unknown driver"):
+        run_pair("justin", driver="simd")
+
+
+# ------------------------------------------------ satellite: fits epsilon
+def test_fits_epsilon_tolerates_attribution_drift():
+    """Satellite pin: ``fits`` must use the same 1e-9 tolerance as the
+    budget invariant.  Accumulated float additions drift the in-use total
+    a few ULPs above the nominal budget (0.1 * 3 > 0.3); the old strict
+    ``<=`` then denied a tenant RE-RESERVING its own unchanged footprint
+    — a phantom denial no real capacity shortage caused."""
+    c = Cluster(cpu_slots=3, memory_mb=0.3)
+    for name in ("a", "b", "c"):
+        assert c.reserve(name, 1, 0.1)
+    # the drifted total sits above the budget by ~5e-17
+    assert c.mem_in_use > c.memory_mb
+    # re-reserving an identical footprint frees 0.1 and re-adds 0.1: any
+    # real shortage is impossible, only drift can deny it
+    assert c.fits("a", 1, 0.1)
+    assert c.reserve("a", 1, 0.1)
+    assert c.fits("b", 1, 0.1)
+
+
+# ----------------------------------- satellite: give-backs cost migration
+def test_preemption_giveback_charged_to_migration_budget():
+    """Satellite pin: a forced give-back moves the victim's state, so it
+    must draw from ``migration_budget_mb`` like any other reconfiguration.
+    On a shared-TM cluster the victim's level-2 -> level-1 give-back quotes
+    1580 MB; under an 800 MB window budget the old code enacted it for
+    free and admitted the requester — now the give-back is skipped and the
+    requester's scale-up is deferred, not force-funded."""
+    res = preemption_pair("preemption", windows=3,
+                          tm_spec=default_tm_spec(158.0),
+                          migration_budget_mb=800.0)
+    h, v = res.tenant("H"), res.tenant("V")
+    # window 0's give-back fits the budget; window 1+'s does not
+    assert v.preemptions == [0]
+    assert v.scaler.flow.nodes["user_sessions"].memory_level == 1
+    # the requester's follow-up windows are budget-deferrals, not
+    # capacity denials: deferrals is the (marked) subset of denials
+    assert h.deferrals == [1, 2]
+    assert set(h.deferrals) <= set(h.denials)
+
+    # an ample budget funds both give-backs (the pinned PR 4 ladder)
+    ample = preemption_pair("preemption", windows=3,
+                            tm_spec=default_tm_spec(158.0),
+                            migration_budget_mb=1e9)
+    assert ample.tenant("V").preemptions == [0, 1]
+
+    # and the budgeted run is decision-identical under the scalar oracle
+    assert_drivers_identical(
+        res, preemption_pair("preemption", windows=3,
+                             tm_spec=default_tm_spec(158.0),
+                             migration_budget_mb=800.0, driver="scalar"))

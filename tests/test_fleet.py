@@ -1,0 +1,149 @@
+"""Fleet-scale driver: population sampling + vectorized/scalar identity.
+
+The vectorized fleet driver is only trustworthy if it is *decision-
+identical* to the scalar oracle — same denials, deferrals, preemptions,
+first-pending ages, usage curves and histories — on fleets it did not see
+during development.  The property sweep here samples random populations
+(heavy-tailed rates, mixed policies/queries, flash crowds, faults, under-
+provisioned stateful tenants) and runs every admission mode with and
+without a migration budget under both drivers.
+"""
+import math
+
+import pytest
+from test_cluster import assert_drivers_identical
+
+from repro.core.placement import default_tm_spec
+from repro.scenarios import (Cluster, ColocatedSpec, PopulationSpec,
+                             fleet_cfg, fleet_stats, run_colocated,
+                             run_fleet, sample_population, size_cluster)
+from repro.scenarios.faults import FaultSchedule
+from repro.scenarios.profiles import Diurnal, Profile, Ramp, Spike
+from repro.scenarios.runner import scenario_horizon_s
+
+
+# ------------------------------------------------------------ population
+def test_population_is_deterministic():
+    cfg = fleet_cfg()
+    horizon = scenario_horizon_s(cfg, 10)
+    a = sample_population(PopulationSpec(tenants=40, seed=7), horizon)
+    b = sample_population(PopulationSpec(tenants=40, seed=7), horizon)
+    assert a == b
+    c = sample_population(PopulationSpec(tenants=40, seed=8), horizon)
+    assert a != c
+
+
+def test_population_shape():
+    spec = PopulationSpec(tenants=200, seed=1)
+    cfg = fleet_cfg()
+    pop = sample_population(spec, scenario_horizon_s(cfg, 20))
+    assert len(pop) == 200
+    names = [s.name for s in pop]
+    assert len(set(names)) == 200
+    # every configured query/policy actually occurs at these counts
+    assert {s.query for s in pop} == {q for q, _ in spec.query_mix}
+    assert {s.policy for s in pop} == {p for p, _ in spec.policy_mix}
+    # heavy tail: rates spread well over an order of magnitude, capped
+    rates = [s.target for s in pop]
+    assert max(rates) <= spec.rate_cap
+    assert max(rates) / min(rates) > 10
+    # the profile mix includes flash-crowd spikes AND staggered diurnals
+    spikes = [s.profile for s in pop if isinstance(s.profile, Spike)]
+    diurnals = [s.profile for s in pop if isinstance(s.profile, Diurnal)]
+    assert spikes and diurnals
+    assert any(isinstance(s.profile, Ramp) for s in pop)
+    # staggered: diurnal phases are NOT aligned
+    assert len({d.phase_s for d in diurnals}) > 1
+    # flash crowd is correlated: spike onsets cluster around mid-horizon
+    horizon = scenario_horizon_s(cfg, 20)
+    for sp in spikes:
+        assert abs(sp.t0 - spec.flash_at_frac * horizon) \
+            <= spec.flash_spread_frac * horizon + 1e-9
+    # faults are plain lists (re-runnable), never pre-built schedules
+    faulted = [s for s in pop if s.faults is not None]
+    assert faulted
+    assert all(isinstance(s.faults, list) for s in faulted)
+    # under-provisioned stateful tenants exist: they scale through
+    # admission, which is where the fleet's arbitration traffic comes from
+    assert any(s.config and any(v == (1, 0) for v in s.config.values())
+               for s in pop)
+
+
+def test_size_cluster_holds_initial_placements():
+    cfg = fleet_cfg()
+    pop = sample_population(PopulationSpec(tenants=24, seed=3),
+                            scenario_horizon_s(cfg, 4))
+    cluster = size_cluster(pop, cfg)
+    # windows=0 runs setup (initial reservations) only: must not raise
+    res = run_colocated(pop, cluster, windows=0, cfg=cfg)
+    assert len(res.tenants) == 24
+    assert res.cluster.cpu_in_use <= cluster.cpu_slots
+    assert res.cluster.mem_in_use <= cluster.memory_mb + 1e-9
+
+
+# ----------------------------------------- property sweep: driver identity
+def _fleet_case(seed, admission, budget, tm_spec=None, tenants=12,
+                windows=4):
+    cfg = fleet_cfg()
+    pop = sample_population(PopulationSpec(tenants=tenants, seed=seed),
+                            scenario_horizon_s(cfg, windows))
+    runs = {}
+    for driver in ("vectorized", "scalar"):
+        cluster = size_cluster(pop, cfg, tm_spec=tm_spec)
+        runs[driver] = run_colocated(pop, cluster, windows=windows,
+                                     cfg=cfg, admission=admission,
+                                     driver=driver,
+                                     migration_budget_mb=budget)
+    return runs
+
+
+@pytest.mark.parametrize("admission", ["priority", "fair_share",
+                                       "first_come", "preemption"])
+@pytest.mark.parametrize("budget", [None, 1500.0])
+def test_drivers_identical_on_random_fleets(admission, budget):
+    """Satellite pin: for random populations, every admission mode, with
+    and without a migration budget, the vectorized driver and the scalar
+    oracle make byte-identical decisions."""
+    for seed in (11, 23):
+        runs = _fleet_case(seed, admission, budget)
+        assert_drivers_identical(runs["vectorized"], runs["scalar"])
+
+
+def test_drivers_identical_on_shared_tm_fleet():
+    """Shared-TaskManager clusters exercise the attribution/repack paths
+    (nonzero give-back quotes, amortized_mb rows) — identity must hold
+    there too."""
+    runs = _fleet_case(31, "preemption", 2000.0,
+                       tm_spec=default_tm_spec(158.0))
+    assert_drivers_identical(runs["vectorized"], runs["scalar"])
+
+
+# ------------------------------------------------------------ fleet smoke
+def test_run_fleet_smoke():
+    res = run_fleet(32, 6, admission="fair_share", seed=0)
+    assert len(res.tenants) == 32
+    assert len(res.usage) == 6
+    for cpu, mem in res.usage:
+        assert cpu <= res.cluster.cpu_slots
+        assert mem <= res.cluster.memory_mb + 1e-9
+    st = fleet_stats(res, 1.0)
+    assert st["tenants"] == 32 and st["windows"] == 6
+    assert st["tenant_windows"] == 192
+    assert st["tenant_windows_per_s"] == pytest.approx(192.0)
+    assert {"denied_tenant_windows", "deferred_tenant_windows",
+            "preempted_tenant_windows", "policy_steps", "peak_cpu",
+            "peak_mem_mb", "cluster_cpu_slots",
+            "cluster_memory_mb"} <= set(st)
+    # the vectorized result keeps its SoA arrays for fleet_stats
+    assert res.fleet is not None
+    assert res.fleet.denied.shape == (6, 32)
+
+
+def test_fleet_contends_at_default_sizing():
+    """The point of ``size_cluster``'s bounded headroom: a default-sized
+    fleet must actually exercise admission (growth > headroom), else the
+    bench measures an uncontended cluster."""
+    res = run_fleet(128, 20, admission="preemption", seed=0)
+    st = fleet_stats(res)
+    assert st["denied_tenant_windows"] > 0
+    assert st["preempted_tenant_windows"] > 0

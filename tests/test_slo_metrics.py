@@ -119,3 +119,18 @@ def test_slo_report_counts_denials():
     h = [row(6, 100, 100), row(12, 80, 100, denied=True),
          row(18, 80, 100, denied=True), row(24, 100, 100)]
     assert slo_report(h).denied_windows == 2
+
+
+def test_single_row_history_has_no_window_spacing():
+    """Satellite pin: a lone row carries no spacing information — its
+    ``t`` is the episode's absolute start offset.  The old fallback
+    returned ``history[0].t`` as the "mean window", inflating a 1-window
+    open-ended violation's catch-up to wherever the episode happened to
+    sit on the clock (600 s here, for a 6 s window)."""
+    lone = [row(600.0, 50, 100, backlog=400)]
+    eps = catch_up_episodes(lone)
+    assert eps == [CatchUp(onset_window=0, recovered_window=None,
+                           duration_s=0.0)]
+    assert catch_up_time_s(lone) == 0.0
+    rep = slo_report(lone)
+    assert rep.catch_up_s == 0.0 and not rep.recovered

@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Schema check for BENCH_cluster.json (the fleet-driver bench output).
+
+CI runs the fleet bench smoke and then this checker; any drift in the
+emitted schema — renamed keys, wrong types, impossible counts — fails the
+build instead of silently producing an unplottable artifact.
+
+    python tools/check_bench.py [BENCH_cluster.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+SCHEMA_VERSION = 1
+
+# key -> required type(s); bool is an int subclass, so exclude it where
+# a genuine number is meant
+RUN_KEYS = {
+    "tenants": int,
+    "windows": int,
+    "tenant_windows": int,
+    "admission": str,
+    "denied_tenant_windows": int,
+    "deferred_tenant_windows": int,
+    "preempted_tenant_windows": int,
+    "policy_steps": int,
+    "peak_cpu": int,
+    "peak_mem_mb": (int, float),
+    "cluster_cpu_slots": int,
+    "cluster_memory_mb": (int, float),
+    "seconds": (int, float),
+    "tenant_windows_per_s": (int, float),
+    "driver": str,
+    "seed": int,
+}
+
+
+def check(data) -> list[str]:
+    errors: list[str] = []
+    if not isinstance(data, dict):
+        return ["top level is not an object"]
+    if data.get("bench") != "cluster_fleet":
+        errors.append(f"bench != 'cluster_fleet': {data.get('bench')!r}")
+    if data.get("schema_version") != SCHEMA_VERSION:
+        errors.append(f"schema_version != {SCHEMA_VERSION}: "
+                      f"{data.get('schema_version')!r}")
+    runs = data.get("runs")
+    if not isinstance(runs, list) or not runs:
+        return errors + ["runs is not a non-empty list"]
+    for i, run in enumerate(runs):
+        if not isinstance(run, dict):
+            errors.append(f"runs[{i}] is not an object")
+            continue
+        for key, typ in RUN_KEYS.items():
+            if key not in run:
+                errors.append(f"runs[{i}] missing key {key!r}")
+            elif not isinstance(run[key], typ) \
+                    or isinstance(run[key], bool):
+                want = typ.__name__ if isinstance(typ, type) \
+                    else "/".join(t.__name__ for t in typ)
+                errors.append(f"runs[{i}][{key!r}] has type "
+                              f"{type(run[key]).__name__}, want {want}")
+        if errors:
+            continue
+        # internal consistency: the headline must be derivable
+        if run["tenant_windows"] != run["tenants"] * run["windows"]:
+            errors.append(f"runs[{i}]: tenant_windows != "
+                          "tenants * windows")
+        if run["seconds"] <= 0 or run["tenant_windows_per_s"] <= 0:
+            errors.append(f"runs[{i}]: non-positive throughput")
+        if run["peak_cpu"] > run["cluster_cpu_slots"]:
+            errors.append(f"runs[{i}]: peak_cpu exceeds the cluster")
+        if run["peak_mem_mb"] > run["cluster_memory_mb"] + 1e-9:
+            errors.append(f"runs[{i}]: peak_mem_mb exceeds the cluster")
+        for key in ("denied_tenant_windows", "deferred_tenant_windows",
+                    "preempted_tenant_windows", "policy_steps"):
+            if run[key] < 0:
+                errors.append(f"runs[{i}][{key!r}] is negative")
+    return errors
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_cluster.json"
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_bench: cannot read {path}: {e}")
+        return 1
+    errors = check(data)
+    for e in errors:
+        print(f"check_bench: {path}: {e}")
+    if not errors:
+        print(f"check_bench: {path}: ok "
+              f"({len(data['runs'])} runs, schema v{SCHEMA_VERSION})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
