@@ -70,4 +70,7 @@ def sorted_probe(table: jax.Array, queries: jax.Array, *,
         ],
         interpret=interpret,
     )(table, queries)
-    return pos[:n], found[:n]
+    # the padded table tail is full of maxval: a genuine maxval query that
+    # is absent from the real table would otherwise report found (its rank
+    # lands exactly at t, past every real entry — mask it out)
+    return pos[:n], found[:n] & (pos[:n] < t)

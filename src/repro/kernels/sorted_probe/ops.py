@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.sorted_probe.kernel import sorted_probe
 from repro.kernels.sorted_probe.ref import sorted_probe_ref
@@ -9,7 +10,15 @@ from repro.kernels.sorted_probe.ref import sorted_probe_ref
 
 def probe(table: jax.Array, queries: jax.Array, *,
           impl: str = "pallas", interpret: bool = True):
-    """impl: "pallas" (TPU kernel; interpret=True executes on CPU) | "ref"."""
+    """impl: "pallas" (TPU kernel; interpret=True executes on CPU) | "ref".
+
+    Returns (pos [N] int32, found [N] bool); pos is the insertion point
+    (== index of the match where found).  Degenerate shapes short-circuit:
+    an empty table finds nothing at rank 0 (the ref's clipped gather would
+    index out of bounds), an empty query batch returns empties."""
+    n = int(queries.shape[0])
+    if int(table.shape[0]) == 0 or n == 0:
+        return jnp.zeros(n, jnp.int32), jnp.zeros(n, bool)
     if impl == "ref":
         return sorted_probe_ref(table, queries)
     return sorted_probe(table, queries, interpret=interpret)

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.window_agg.kernel import window_agg
 from repro.kernels.window_agg.ref import window_agg_ref
@@ -9,6 +10,14 @@ from repro.kernels.window_agg.ref import window_agg_ref
 
 def aggregate(seg_ids: jax.Array, values: jax.Array, n_segments: int, *,
               impl: str = "pallas", interpret: bool = True):
+    """seg_ids in [0, n_segments); returns (sums [S, V], counts [S]).
+
+    Degenerate shapes short-circuit: with no events the kernel's grid has a
+    zero-length accumulation axis and would return uninitialized output
+    blocks, so both impls answer zeros directly."""
+    if int(values.shape[0]) == 0 or n_segments == 0:
+        return (jnp.zeros((n_segments, int(values.shape[1])), jnp.float32),
+                jnp.zeros(n_segments, jnp.float32))
     if impl == "ref":
         return window_agg_ref(seg_ids, values, n_segments)
     return window_agg(seg_ids, values, n_segments, interpret=interpret)

@@ -40,8 +40,7 @@ def engine_store_stats(engine, tenant: str = ""
     for name, tasks in engine.tasks.items():
         for i, tr in enumerate(tasks):
             if tr.state is not None:
-                out[(tenant, name, i)] = (tr.state.entry_count
-                                          * tr.state.entry_bytes) / 2**20
+                out[(tenant, name, i)] = tr.state.state_mb
     return out
 
 

@@ -203,26 +203,97 @@ class StreamEngine:
         keys, vals = tmp.items()
         if len(keys) == 0:
             return
-        part = hash_partition(state_partition_keys(node.op, keys),
-                              node.parallelism)
-        self._install_partitions(name, part, keys, vals)
+        self._install_partitions(name, [{"keys": keys, "vals": vals}])
 
-    def _install_partitions(self, name: str, part: np.ndarray,
-                            keys: np.ndarray, vals: np.ndarray) -> None:
-        """Distribute (keys, vals) onto tasks: each task gets its partition
-        as one sorted run plus a cache prewarm over the partition in
-        original order (the order the masked per-task path fed the prewarm
-        sampler).  One global lexsort yields both: its slices are the
-        key-sorted runs, and sorting a slice's *indices* recovers the
-        original arrival order."""
+    def _install_partitions(self, name: str, sources: list[dict]) -> None:
+        """Distribute state snapshots onto the op's tasks.
+
+        Replaces the old global ``np.lexsort((keys, part))`` with per-source
+        work that exploits what snapshots guarantee: keys are already
+        sorted.  Per source, one stable sort by destination partition keeps
+        each destination slice key-sorted; per destination, the per-source
+        slices are sorted runs merged by a single stable argsort over their
+        concatenation (ties resolve in source order — exactly the order the
+        global lexsort produced, duplicates across sources included).  Each
+        task gets its merged partition as one installed run plus a cache
+        prewarm over the partition in original arrival order (per-source
+        ascending positions, sources in order — the order the lexsort-slice
+        path fed the sampler, so the shared rng draws identically)."""
+        from repro.state.lsm import get_store_impl, stable_argsort_keys
+        if get_store_impl() == "legacy":
+            self._install_partitions_lexsort(name, sources)
+            return
+        node = self.flow.nodes[name]
         p = len(self.tasks[name])
+        dk = [[] for _ in range(p)]          # key-sorted run fragments
+        dw = [[] for _ in range(p)]
+        dv = [[] for _ in range(p)]
+        ak = [[] for _ in range(p)]          # arrival-order prewarm fragments
+        av = [[] for _ in range(p)]
+        for s in sources:
+            keys = np.asarray(s["keys"], np.int64)
+            if not len(keys):
+                continue
+            vals = np.asarray(s["vals"], np.int32)
+            w = s.get("weights")
+            w = np.ones(len(keys), np.int64) if w is None \
+                else np.asarray(w, np.int64)
+            part = hash_partition(state_partition_keys(node.op, keys), p)
+            # uint16 cast => numpy radix-sorts the partition ids (p < 2^16)
+            order = np.argsort(part.astype(np.uint16), kind="stable")
+            bounds = np.searchsorted(part[order], np.arange(p + 1))
+            for i in range(p):
+                # stable sort on partition only => each slice is already in
+                # original arrival order, so the install fragment doubles as
+                # the prewarm fragment (no second gather)
+                sl = order[bounds[i]:bounds[i + 1]]
+                if not len(sl):
+                    continue
+                kk, vv = keys[sl], vals[sl]
+                dk[i].append(kk)
+                dw[i].append(w[sl])
+                dv[i].append(vv)
+                ak[i].append(kk)
+                av[i].append(vv)
+        for i in range(p):
+            tr = self.tasks[name][i]
+            if dk[i]:
+                if len(dk[i]) == 1:
+                    mk, mw, mv = dk[i][0], dw[i][0], dv[i][0]
+                else:
+                    mk = np.concatenate(dk[i])
+                    mw = np.concatenate(dw[i])
+                    mv = np.concatenate(dv[i])
+                if len(mk) > 1 and (len(dk[i]) > 1
+                                    or np.any(mk[1:] < mk[:-1])):
+                    o = stable_argsort_keys(mk)
+                    mk, mw, mv = mk[o], mw[o], mv[o]
+                tr.state.install_run(mk, mv, mw)
+                wk = ak[i][0] if len(ak[i]) == 1 else np.concatenate(ak[i])
+                wv = av[i][0] if len(av[i]) == 1 else np.concatenate(av[i])
+                tr.state.prewarm_cache(wk, wv, self.rng)
+            tr.state.metrics.reset()
+
+    def _install_partitions_lexsort(self, name: str,
+                                    sources: list[dict]) -> None:
+        """The pre-columnar installer (one global ``np.lexsort``), kept
+        verbatim so the frozen legacy store runs in its own historical
+        configuration — ``benchmarks/run.py lsm`` A/Bs the two backends
+        like for like (store + install path together)."""
+        node = self.flow.nodes[name]
+        keys = np.concatenate([np.asarray(s["keys"], np.int64)
+                               for s in sources])
+        vals = np.concatenate([np.asarray(s["vals"], np.int32)
+                               for s in sources])
+        p = len(self.tasks[name])
+        part = hash_partition(state_partition_keys(node.op, keys), p)
         srt = np.lexsort((keys, part))           # by partition, then key
         bounds = np.searchsorted(part[srt], np.arange(p + 1))
         for i in range(p):
             tr = self.tasks[name][i]
             run = srt[bounds[i]:bounds[i + 1]]
             if len(run):
-                tr.state._push_run(keys[run], vals[run])
+                tr.state.install_run(keys[run], vals[run])
                 sl = np.sort(run)                # original order
                 tr.state.prewarm_cache(keys[sl], vals[sl], self.rng)
             tr.state.metrics.reset()
@@ -245,16 +316,9 @@ class StreamEngine:
                 self._init_op(name, warm=False, snapshots=snap["ops"][name])
 
     def _load_state(self, name: str, snapshots: list[dict]) -> None:
-        node = self.flow.nodes[name]
-        keys = np.concatenate([s["keys"] for s in snapshots]) \
-            if snapshots else np.empty(0, np.int64)
-        vals = np.concatenate([s["vals"] for s in snapshots]) \
-            if snapshots else np.empty((0, 4), np.int32)
-        if len(keys) == 0:
-            return
-        pkeys = state_partition_keys(node.op, keys)
-        part = hash_partition(pkeys, node.parallelism)
-        self._install_partitions(name, part, keys, vals)
+        sources = [s for s in snapshots if len(s["keys"])]
+        if sources:
+            self._install_partitions(name, sources)
 
     # -------------------------------------------------------- reconfiguration
     def reconfigure(self, new_config: dict[str, tuple[int, int | None]]

@@ -24,8 +24,11 @@ class EventBatch:
                    np.empty(0, np.float64), np.empty(0, np.int8))
 
     def select(self, mask_or_idx) -> "EventBatch":
-        return EventBatch(self.key[mask_or_idx], self.value[mask_or_idx],
-                          self.ts[mask_or_idx], self.kind[mask_or_idx])
+        m = mask_or_idx
+        if isinstance(m, np.ndarray) and m.dtype == np.bool_ and m.all():
+            return self        # batches are immutable (see ``slice``)
+        return EventBatch(self.key[m], self.value[m], self.ts[m],
+                          self.kind[m])
 
     def slice(self, lo: int, hi: int) -> "EventBatch":
         """Contiguous sub-batch as O(1) numpy views (no copy).  Safe because
@@ -42,6 +45,8 @@ class EventBatch:
         batches = [b for b in batches if len(b)]
         if not batches:
             return EventBatch.empty()
+        if len(batches) == 1:      # immutable batches: no defensive copy
+            return batches[0]
         return EventBatch(np.concatenate([b.key for b in batches]),
                           np.concatenate([b.value for b in batches]),
                           np.concatenate([b.ts for b in batches]),

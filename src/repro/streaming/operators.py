@@ -15,7 +15,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.state.lsm import LSMStore, LatencyModel
+from repro.state.lsm import LSMStore, LatencyModel, make_store
 from repro.streaming.events import EventBatch, PAYLOAD_WORDS
 
 
@@ -31,8 +31,10 @@ class Operator:
     def make_state(self, memory_mb: float, seed: int = 0) -> LSMStore | None:
         if not self.stateful:
             return None
-        return LSMStore(memory_mb, value_words=PAYLOAD_WORDS,
-                        entry_bytes=self.entry_bytes, seed=seed)
+        # built through the store factory so benchmarks and the
+        # differential harness can swap implementations engine-wide
+        return make_store(memory_mb, value_words=PAYLOAD_WORDS,
+                          entry_bytes=self.entry_bytes, seed=seed)
 
     def process(self, state: LSMStore | None, batch: EventBatch) -> EventBatch:
         raise NotImplementedError
@@ -283,8 +285,21 @@ class JoinOp(Operator):
             if not mask.any():
                 continue
             sub = batch.select(mask)
-            state.put_batch(self._skey(sub.key, sub.ts, mine), sub.value)
-            vals, found = state.get_batch(self._skey(sub.key, sub.ts, other))
+            d = state.put_batch(self._skey(sub.key, sub.ts, mine), sub.value)
+            if d is not None:
+                # probe keys are the put keys shifted by a constant (the
+                # side bit is below the window bits), so the put batch's
+                # delta decomposition doubles as the probe's sorted-unique
+                # hint — one sort serves both Z-set operations
+                shift = np.int64((other - mine)
+                                 * ((1 << 16) if self.window_s is not None
+                                    else 1))
+                vals, found = state.get_batch(
+                    self._skey(sub.key, sub.ts, other),
+                    uhint=(d[0] + shift, d[1]))
+            else:
+                vals, found = state.get_batch(
+                    self._skey(sub.key, sub.ts, other))
             if found.any():
                 joined = sub.select(found)
                 out.append(EventBatch(joined.key, vals[found], joined.ts,

@@ -1,0 +1,150 @@
+"""Edge-shape parity: sorted_probe / window_agg pallas kernels vs their
+numpy/jnp references, in interpret mode (no accelerator needed), plus the
+columnar LSM store's kernel dispatch (``kernel_impl="pallas"``) vs its
+numpy oracle path.
+
+The shape sweep here deliberately covers what tests/test_kernels.py's
+random sweeps don't pin: empty inputs, single-key tables, all-duplicate
+batches, and dtype-boundary keys (0, int_max — the kernel pads tables
+with int_max, which used to false-positive a genuine int_max probe).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.sorted_probe.ops import probe
+from repro.kernels.window_agg.ops import aggregate
+from repro.state.lsm import LSMStore
+
+
+def assert_probe_parity(table, queries):
+    p1, f1 = probe(jnp.asarray(table), jnp.asarray(queries))
+    p2, f2 = probe(jnp.asarray(table), jnp.asarray(queries), impl="ref")
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    return np.asarray(p1), np.asarray(f1)
+
+
+# ------------------------------------------------------------- sorted_probe
+def test_probe_empty_table():
+    pos, found = assert_probe_parity(np.empty(0, np.int64),
+                                     np.array([1, 2, 3], np.int64))
+    assert not found.any()
+    assert (pos == 0).all()
+
+
+def test_probe_empty_queries():
+    pos, found = assert_probe_parity(np.array([1, 2, 3], np.int64),
+                                     np.empty(0, np.int64))
+    assert len(pos) == 0 and len(found) == 0
+
+
+def test_probe_single_key_table():
+    pos, found = assert_probe_parity(np.array([42], np.int64),
+                                     np.array([41, 42, 43], np.int64))
+    np.testing.assert_array_equal(found, [False, True, False])
+    np.testing.assert_array_equal(pos, [0, 0, 1])
+
+
+def test_probe_all_duplicate_queries():
+    table = np.arange(0, 1000, 7, dtype=np.int64)
+    queries = np.full(2048, 700, np.int64)          # all one present key
+    pos, found = assert_probe_parity(table, queries)
+    assert found.all()
+    assert (table[pos] == 700).all()
+
+
+def test_probe_duplicate_table_entries():
+    """Sorted but NOT unique table: rank = leftmost insertion point."""
+    table = np.array([5, 5, 5, 9, 9], np.int64)
+    pos, found = assert_probe_parity(table, np.array([5, 7, 9], np.int64))
+    np.testing.assert_array_equal(pos, [0, 3, 3])
+    np.testing.assert_array_equal(found, [True, False, True])
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.int64])
+def test_probe_dtype_boundaries(dtype):
+    """0 and int_max as real keys AND as absent probes — the kernel pads
+    its table tiles with int_max, which must not read as a match.  int64
+    needs x64 enabled or jax silently truncates the arrays to int32."""
+    from jax.experimental import enable_x64
+    hi = np.iinfo(dtype).max
+    with enable_x64():
+        table = np.array([0, 17, hi], dtype)
+        pos, found = assert_probe_parity(table, np.array([0, 1, hi, hi - 1],
+                                                         dtype))
+        np.testing.assert_array_equal(found, [True, False, True, False])
+        table_no_hi = np.array([0, 17], dtype)
+        _, found = assert_probe_parity(table_no_hi, np.array([hi], dtype))
+        assert not found.any()                  # padding must NOT match
+
+
+def test_probe_exact_tile_multiple():
+    """Table/query sizes exactly at the kernel tile sizes (no padding)."""
+    table = np.arange(2048, dtype=np.int64) * 3
+    queries = np.arange(512, dtype=np.int64) * 3 + 1   # all absent
+    _, found = assert_probe_parity(table, queries)
+    assert not found.any()
+
+
+# -------------------------------------------------------------- window_agg
+def assert_agg_parity(seg, vals, n_segments):
+    s1, c1 = aggregate(jnp.asarray(seg), jnp.asarray(vals), n_segments)
+    s2, c2 = aggregate(jnp.asarray(seg), jnp.asarray(vals), n_segments,
+                       impl="ref")
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    return np.asarray(s1), np.asarray(c1)
+
+
+def test_agg_empty_events():
+    sums, counts = assert_agg_parity(np.empty(0, np.int32),
+                                     np.empty((0, 3), np.float32), 16)
+    assert sums.shape == (16, 3) and (sums == 0).all()
+    assert (counts == 0).all()
+
+
+def test_agg_zero_segments():
+    sums, counts = assert_agg_parity(np.empty(0, np.int32),
+                                     np.empty((0, 2), np.float32), 0)
+    assert sums.shape == (0, 2) and counts.shape == (0,)
+
+
+def test_agg_single_segment_all_duplicates():
+    seg = np.zeros(1500, np.int32)
+    vals = np.ones((1500, 1), np.float32)
+    sums, counts = assert_agg_parity(seg, vals, 1)
+    assert sums[0, 0] == 1500.0 and counts[0] == 1500.0
+
+
+def test_agg_segment_count_off_tile():
+    """n_segments just past a SEG_BLOCK boundary; events off EVENT_TILE."""
+    rng = np.random.default_rng(5)
+    seg = rng.integers(0, 513, 1025).astype(np.int32)
+    vals = rng.normal(size=(1025, 2)).astype(np.float32)
+    assert_agg_parity(seg, vals, 513)
+
+
+# ------------------------------------------- LSM store dispatch: pallas path
+def test_store_pallas_impl_matches_numpy_oracle():
+    """The columnar store's get/put/flush behavior must not depend on which
+    kernel backend serves its probes and weight sums."""
+    rng = np.random.default_rng(11)
+    a = LSMStore(0.5, value_words=2, kernel_impl="numpy")
+    b = LSMStore(0.5, value_words=2, kernel_impl="pallas")
+    for step in range(6):
+        n = int(rng.integers(1, 800))
+        keys = rng.integers(0, 2_000, n).astype(np.int64)
+        vals = rng.integers(0, 1 << 30, (n, 2)).astype(np.int32)
+        a.put_batch(keys, vals)
+        b.put_batch(keys, vals)
+        q = rng.integers(0, 2_500, 300).astype(np.int64)
+        ga, fa = a.get_batch(q)
+        gb, fb = b.get_batch(q)
+        np.testing.assert_array_equal(fa, fb, err_msg=str(step))
+        np.testing.assert_array_equal(ga, gb, err_msg=str(step))
+        assert a.metrics.snapshot() == b.metrics.snapshot(), step
+    ka, va = a.items()
+    kb, vb = b.items()
+    np.testing.assert_array_equal(ka, kb)
+    np.testing.assert_array_equal(va, vb)

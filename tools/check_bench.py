@@ -1,22 +1,34 @@
 #!/usr/bin/env python
-"""Schema check for BENCH_cluster.json (the fleet-driver bench output).
+"""Schema + regression check for committed bench artifacts.
 
-CI runs the fleet bench smoke and then this checker; any drift in the
-emitted schema — renamed keys, wrong types, impossible counts — fails the
-build instead of silently producing an unplottable artifact.
+Dispatches on the artifact's ``bench`` tag:
 
-    python tools/check_bench.py [BENCH_cluster.json]
+* ``cluster_fleet`` — BENCH_cluster.json, the fleet-driver bench
+* ``lsm_store``     — BENCH_lsm.json, the legacy-vs-columnar store A/B
+
+CI runs the bench and then this checker; any drift in the emitted
+schema — renamed keys, wrong types, impossible counts — fails the build
+instead of silently producing an unplottable artifact.
+
+With ``--baseline PATH`` the headline metric is also compared against a
+committed reference artifact of the same bench kind, and the check fails
+on a regression of more than REGRESSION_TOLERANCE (20%) — the gate that
+keeps the columnar store's speedup from silently rotting.
+
+    python tools/check_bench.py [ARTIFACT.json] [--baseline PATH]
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 
 SCHEMA_VERSION = 1
+REGRESSION_TOLERANCE = 0.20          # fail if headline drops >20%
 
 # key -> required type(s); bool is an int subclass, so exclude it where
 # a genuine number is meant
-RUN_KEYS = {
+FLEET_RUN_KEYS = {
     "tenants": int,
     "windows": int,
     "tenant_windows": int,
@@ -35,38 +47,58 @@ RUN_KEYS = {
     "seed": int,
 }
 
+LSM_RUN_KEYS = {
+    "impl": str,
+    "query": str,
+    "policy": str,
+    "seed": int,
+    "repeats": int,
+    "seconds": list,
+    "seconds_min": (int, float),
+    "steps": int,
+    "achieved_rate": (int, float),
+}
 
-def check(data) -> list[str]:
-    errors: list[str] = []
+
+def _check_run_keys(run: dict, i: int, schema: dict) -> list[str]:
+    errors = []
+    for key, typ in schema.items():
+        if key not in run:
+            errors.append(f"runs[{i}] missing key {key!r}")
+        elif not isinstance(run[key], typ) or isinstance(run[key], bool):
+            want = typ.__name__ if isinstance(typ, type) \
+                else "/".join(t.__name__ for t in typ)
+            errors.append(f"runs[{i}][{key!r}] has type "
+                          f"{type(run[key]).__name__}, want {want}")
+    return errors
+
+
+def _check_common(data) -> tuple[list[str], list]:
     if not isinstance(data, dict):
-        return ["top level is not an object"]
-    if data.get("bench") != "cluster_fleet":
-        errors.append(f"bench != 'cluster_fleet': {data.get('bench')!r}")
+        return ["top level is not an object"], []
+    errors = []
     if data.get("schema_version") != SCHEMA_VERSION:
         errors.append(f"schema_version != {SCHEMA_VERSION}: "
                       f"{data.get('schema_version')!r}")
     runs = data.get("runs")
     if not isinstance(runs, list) or not runs:
-        return errors + ["runs is not a non-empty list"]
+        return errors + ["runs is not a non-empty list"], []
+    return errors, runs
+
+
+def check_cluster_fleet(data) -> list[str]:
+    errors, runs = _check_common(data)
     for i, run in enumerate(runs):
         if not isinstance(run, dict):
             errors.append(f"runs[{i}] is not an object")
             continue
-        for key, typ in RUN_KEYS.items():
-            if key not in run:
-                errors.append(f"runs[{i}] missing key {key!r}")
-            elif not isinstance(run[key], typ) \
-                    or isinstance(run[key], bool):
-                want = typ.__name__ if isinstance(typ, type) \
-                    else "/".join(t.__name__ for t in typ)
-                errors.append(f"runs[{i}][{key!r}] has type "
-                              f"{type(run[key]).__name__}, want {want}")
-        if errors:
+        key_errors = _check_run_keys(run, i, FLEET_RUN_KEYS)
+        if key_errors:
+            errors += key_errors
             continue
         # internal consistency: the headline must be derivable
         if run["tenant_windows"] != run["tenants"] * run["windows"]:
-            errors.append(f"runs[{i}]: tenant_windows != "
-                          "tenants * windows")
+            errors.append(f"runs[{i}]: tenant_windows != tenants * windows")
         if run["seconds"] <= 0 or run["tenant_windows_per_s"] <= 0:
             errors.append(f"runs[{i}]: non-positive throughput")
         if run["peak_cpu"] > run["cluster_cpu_slots"]:
@@ -80,20 +112,120 @@ def check(data) -> list[str]:
     return errors
 
 
+def check_lsm_store(data) -> list[str]:
+    errors, runs = _check_common(data)
+    if not isinstance(data.get("speedup"), (int, float)) \
+            or isinstance(data.get("speedup"), bool):
+        errors.append(f"speedup is not a number: {data.get('speedup')!r}")
+    mins: dict[str, float] = {}
+    for i, run in enumerate(runs):
+        if not isinstance(run, dict):
+            errors.append(f"runs[{i}] is not an object")
+            continue
+        key_errors = _check_run_keys(run, i, LSM_RUN_KEYS)
+        if key_errors:
+            errors += key_errors
+            continue
+        secs = run["seconds"]
+        if len(secs) != run["repeats"] or not all(
+                isinstance(s, (int, float)) and not isinstance(s, bool)
+                and s > 0 for s in secs):
+            errors.append(f"runs[{i}]: seconds is not {run['repeats']} "
+                          "positive numbers")
+            continue
+        if abs(run["seconds_min"] - min(secs)) > 1e-9:
+            errors.append(f"runs[{i}]: seconds_min != min(seconds)")
+        if run["achieved_rate"] <= 0:
+            errors.append(f"runs[{i}]: non-positive achieved_rate")
+        mins[run["impl"]] = run["seconds_min"]
+    if not errors:
+        if set(mins) != {"legacy", "columnar"}:
+            errors.append(f"impls != {{legacy, columnar}}: {sorted(mins)}")
+        else:
+            derived = mins["legacy"] / mins["columnar"]
+            if abs(derived - data["speedup"]) > 0.01:
+                errors.append(f"speedup {data['speedup']} is not "
+                              f"legacy_min/columnar_min ({derived:.3f})")
+    return errors
+
+
+CHECKERS = {
+    "cluster_fleet": check_cluster_fleet,
+    "lsm_store": check_lsm_store,
+}
+
+# headline metric per bench kind: (extractor, higher_is_better)
+HEADLINES = {
+    "cluster_fleet": lambda d: max(r["tenant_windows_per_s"]
+                                   for r in d["runs"]),
+    "lsm_store": lambda d: d["speedup"],
+}
+
+
+def check(data) -> list[str]:
+    if not isinstance(data, dict):
+        return ["top level is not an object"]
+    kind = data.get("bench")
+    checker = CHECKERS.get(kind)
+    if checker is None:
+        return [f"unknown bench kind {kind!r} "
+                f"(want one of {sorted(CHECKERS)})"]
+    return checker(data)
+
+
+def check_baseline(data, base) -> list[str]:
+    """Headline regression gate: fail when the current artifact's headline
+    metric (both benches: higher is better) drops more than
+    REGRESSION_TOLERANCE below the committed baseline's."""
+    if data.get("bench") != base.get("bench"):
+        return [f"baseline bench kind {base.get('bench')!r} does not match "
+                f"artifact {data.get('bench')!r}"]
+    extract = HEADLINES[data["bench"]]
+    cur, ref = extract(data), extract(base)
+    floor = ref * (1.0 - REGRESSION_TOLERANCE)
+    if cur < floor:
+        return [f"headline regression: {cur:.3f} < {floor:.3f} "
+                f"(baseline {ref:.3f} - {REGRESSION_TOLERANCE:.0%})"]
+    return []
+
+
+def _load(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
 def main() -> int:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_cluster.json"
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifact", nargs="?", default="BENCH_cluster.json")
+    ap.add_argument("--baseline", metavar="PATH",
+                    help="committed reference artifact; fail on >"
+                         f"{REGRESSION_TOLERANCE:.0%} headline regression")
+    args = ap.parse_args()
     try:
-        with open(path) as f:
-            data = json.load(f)
+        data = _load(args.artifact)
     except (OSError, json.JSONDecodeError) as e:
-        print(f"check_bench: cannot read {path}: {e}")
+        print(f"check_bench: cannot read {args.artifact}: {e}")
         return 1
     errors = check(data)
+    if not errors and args.baseline:
+        try:
+            base = _load(args.baseline)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"check_bench: cannot read baseline "
+                  f"{args.baseline}: {e}")
+            return 1
+        base_errors = check(base)
+        if base_errors:
+            errors += [f"baseline {args.baseline}: {e}"
+                       for e in base_errors]
+        else:
+            errors += check_baseline(data, base)
     for e in errors:
-        print(f"check_bench: {path}: {e}")
+        print(f"check_bench: {args.artifact}: {e}")
     if not errors:
-        print(f"check_bench: {path}: ok "
-              f"({len(data['runs'])} runs, schema v{SCHEMA_VERSION})")
+        extra = f", headline {HEADLINES[data['bench']](data):.3f}"
+        print(f"check_bench: {args.artifact}: ok ({len(data['runs'])} runs, "
+              f"schema v{SCHEMA_VERSION}{extra})")
     return 1 if errors else 0
 
 
