@@ -55,6 +55,7 @@ from repro.core.justin import JustinParams
 from repro.core.placement import (TaskRequest, placement_for_config,
                                   placement_requests)
 from repro.core.policy import ScalingPolicy, make_policy
+from repro.core.units import mem_exceeds
 from repro.streaming.engine import StreamEngine
 
 
@@ -282,7 +283,11 @@ class AutoScaler:
             cpu_new, mem_new = self.resources(new_config, cluster=shared)
             cpu_cur, mem_cur = (cpu, mem) if shared is None \
                 else self.resources(cluster=shared)
-            grows = cpu_new > cpu_cur or mem_new > mem_cur
+            # epsilon-disciplined growth test: shared-TM attributions are
+            # accumulated floats, and a drifted re-quote of an identical
+            # footprint must not be gated (and possibly denied) as a
+            # scale-up
+            grows = cpu_new > cpu_cur or mem_exceeds(mem_new, mem_cur)
             if grows and self.admission is not None \
                     and not self.admission(self, new_config,
                                            cpu_new, mem_new):

@@ -25,6 +25,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.core.units import mem_fits
+
 
 @dataclass(frozen=True)
 class TMSpec:
@@ -68,8 +70,12 @@ class TaskManager:
         return sum(t.memory_mb for t in self.tasks)
 
     def fits(self, req: TaskRequest) -> bool:
+        # used_mem is a float sum: an epsilon-free <= here denies a task
+        # that exactly fills the pool whenever the accumulated grants
+        # drift a few ULPs high (the Cluster.fits phantom-denial class)
         return (self.used_slots < self.spec.slots
-                and self.used_mem + req.memory_mb <= self.spec.managed_pool_mb)
+                and mem_fits(self.used_mem + req.memory_mb,
+                             self.spec.managed_pool_mb))
 
     def tenant_slots(self, tenant: str) -> int:
         return sum(1 for t in self.tasks if t.tenant == tenant)

@@ -1,0 +1,46 @@
+"""Blessed resource-accounting comparisons: epsilon-disciplined MB math.
+
+Memory footprints in this codebase are *accumulated* floats — amortized
+shared-TM attributions, repack sums, per-window budget remainders — and
+two mathematically equal footprints routinely differ by a few ULPs
+depending on summation order.  PR 6's ``Cluster.fits`` bug (0.1 × 3 >
+0.3 phantom-denying an identical re-reservation) is the canonical
+failure.  Every budget comparison on MB quantities therefore goes
+through ONE tolerance, defined here, so admission checks, invariant
+asserts and packers can never disagree with each other:
+
+* :func:`mem_fits` — "does ``used`` fit in ``budget``?" (``<=`` + eps);
+* :func:`mem_exceeds` — "is ``a`` strictly more than ``b``?" (``>`` + eps,
+  the admission-gating growth test);
+* :func:`mem_close` — drift-tolerant equality (audit reconciliation).
+
+``reprolint`` (tools/lint, rule F201) flags bare ``==``/``<=``/``<``
+comparisons between MB-named quantities in accounting code; routing them
+through these helpers (or an explicit ``_EPS`` term) is the blessed form.
+"""
+from __future__ import annotations
+
+# One tolerance for every budget comparison.  1e-9 MB is ~1 byte — far
+# below any real grant and far above accumulated float drift at fleet
+# scale (thousands of ~1e3-MB terms drift by <1e-9 relative).
+MB_EPS = 1e-9
+
+
+def mem_fits(used_mb: float, budget_mb: float, *,
+             eps: float = MB_EPS) -> bool:
+    """Does a summed footprint fit a budget, tolerating summation drift?"""
+    return used_mb <= budget_mb + eps
+
+
+def mem_exceeds(a_mb: float, b_mb: float, *, eps: float = MB_EPS) -> bool:
+    """Is ``a_mb`` strictly larger than ``b_mb`` beyond float drift?  The
+    admission-gating test: a footprint only *grows* when it grows by more
+    than an epsilon, so a drifted re-quote of an identical placement is
+    never treated as a scale-up."""
+    return a_mb > b_mb + eps
+
+
+def mem_close(a_mb: float, b_mb: float, *, eps: float = MB_EPS) -> bool:
+    """Drift-tolerant equality between two MB quantities (audit
+    reconciliation between incremental counters and full sums)."""
+    return abs(a_mb - b_mb) <= eps

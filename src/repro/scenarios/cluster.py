@@ -87,6 +87,7 @@ from repro.core.justin import JustinParams
 from repro.core.placement import (MigrationCost, SharedPlacement,
                                   TaskRequest, TMSpec, repack, shared_pack)
 from repro.core.policy import make_policy
+from repro.core.units import MB_EPS, mem_close
 from repro.data.nexmark import QUERIES, TARGET_RATES
 from repro.scenarios.faults import FaultSchedule
 from repro.scenarios.metrics import SLOReport, slo_report
@@ -101,8 +102,10 @@ DRIVERS = ("vectorized", "scalar")
 # and the invariant asserts must agree, or float drift in the summed
 # attribution can deny re-reserving an IDENTICAL footprint that the
 # invariant happily accepts (the post-step resync then dies with a
-# spurious "accounting desync")
-_EPS = 1e-9
+# spurious "accounting desync").  The value is the repo-wide blessed
+# tolerance from repro.core.units, shared with the placement packer and
+# the controller's admission-gating growth test.
+_EPS = MB_EPS
 
 
 @dataclass
@@ -242,6 +245,11 @@ class Cluster:
     def release(self, tenant: str) -> None:
         self._cpu_total -= self.used_cpu.pop(tenant, 0)
         self._mem_total -= self.used_mem.pop(tenant, 0.0)
+        # releases can't overdraw, but the O(1) counters must stay honest
+        # against the dicts they mirror: going negative means a double
+        # release / stale-tenant bug upstream
+        assert self._cpu_total >= 0 and self._mem_total >= -_EPS, \
+            "budget counters negative after release"
         if self.shared and tenant in self.tasks:
             del self.tasks[tenant]
             self._commit_placement(shared_pack(self.tasks, self.tm_spec))
@@ -914,8 +922,8 @@ def _run_vectorized(tenants: list[TenantRun], cluster: Cluster,
         if cluster.shared:
             fleet.refresh()
         assert int(fleet.used_cpu.sum()) == cluster.cpu_in_use \
-            and abs(float(fleet.used_mem.sum())
-                    - cluster.mem_in_use) <= 1e-6 \
+            and mem_close(float(fleet.used_mem.sum()),
+                          cluster.mem_in_use, eps=1e-6) \
             and cluster.cpu_in_use <= cluster.cpu_slots \
             and cluster.mem_in_use <= cluster.memory_mb + _EPS, \
             "fleet accounting desync"

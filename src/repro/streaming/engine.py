@@ -381,7 +381,11 @@ class StreamEngine:
                         t.queue.append(sub)
                         self._queued_delta(d, t, len(sub))
             else:                                   # rebalance round-robin
-                order = np.argsort([t.queued_events for t in self.tasks[d]])
+                # stable: quicksort's tie order diverges from index order
+                # at >=17 tasks, making the rebalance assignment depend on
+                # sort-algorithm internals instead of task index
+                order = np.argsort([t.queued_events for t in self.tasks[d]],
+                                   kind="stable")
                 # same contiguous ranges np.array_split produces, as views
                 q, r = divmod(len(out), dn.parallelism)
                 lo = 0

@@ -74,3 +74,37 @@ def test_reasonable_step_counts(q11_results):
     d, j = q11_results["ds2"], q11_results["justin"]
     assert j["steps"] <= d["steps"] + 2
     assert j["steps"] <= 6
+
+
+def test_epsilon_growth_is_not_gated():
+    """A drifted re-quote of an identical footprint (mem_new = mem_cur +
+    1e-12) is NOT a scale-up: the admission hook must not be consulted
+    and the reconfiguration must be enacted.  Guards the epsilon-
+    disciplined growth test in step_window (repro.core.units)."""
+    from repro.core.policy import Proposal
+
+    calls = []
+
+    def deny(scaler, config, cpu, mem):
+        calls.append(config)
+        return False
+
+    flow = QUERIES["q1"]()
+    eng = StreamEngine(flow, seed=0)
+    ctl = AutoScaler(eng, TARGET_RATES["q1"],
+                     ControllerConfig(policy="ds2"), admission=deny)
+    new_config = dict(flow.config())
+    name = next(n for n in new_config if n not in flow.sources())
+    p, lvl = new_config[name]
+    new_config[name] = (p + 1, lvl)
+
+    base = ctl.resources()
+    ctl.policy.should_trigger = lambda *a, **k: True
+    ctl.policy.propose = lambda *a, **k: Proposal(config=new_config)
+    ctl.resources = lambda config=None, *, cluster=None: \
+        base if config is None else (base[0], base[1] + 1e-12)
+
+    ctl.step_window(0)
+    assert calls == []                            # hook never consulted
+    assert ctl.flow.config()[name] == (p + 1, lvl)   # proposal enacted
+    assert not ctl.history[-1].denied

@@ -1,0 +1,185 @@
+"""reprolint: the rule panel against its fixtures, baseline round-trip,
+and the CLI contract (exit codes, JSON schema, self-check).
+
+The fixture files under ``tools/lint/fixtures/`` are the ground truth:
+each declares a pretend path (``# as: src/repro/...``) and annotates
+every expected finding with ``# expect: RULE`` on its line.  The test
+suite re-runs them through :func:`lint_source` (the same entry point the
+CLI self-check uses) so a rule regression fails here *and* in CI's
+``--self-check`` step.
+"""
+import json
+import pathlib
+import re
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))           # tools/ is not an installed package
+
+from tools.lint.core import (all_rules, lint_source, load_baseline,  # noqa: E402
+                             split_new, write_baseline)
+
+FIXTURES = REPO / "tools" / "lint" / "fixtures"
+_AS = re.compile(r"^#\s*as:\s*(\S+)\s*$", re.MULTILINE)
+_EXPECT = re.compile(r"#\s*expect:\s*([A-Z][0-9]+(?:\s*,\s*[A-Z][0-9]+)*)")
+
+
+def fixture_cases():
+    for p in sorted(FIXTURES.glob("*.py")):
+        src = p.read_text()
+        m = _AS.search(src)
+        relpath = m.group(1) if m else f"tools/lint/fixtures/{p.name}"
+        expected = set()
+        for i, line in enumerate(src.splitlines(), 1):
+            em = _EXPECT.search(line)
+            if em:
+                for rule in re.split(r"\s*,\s*", em.group(1)):
+                    expected.add((i, rule))
+        yield pytest.param(src, relpath, expected, id=p.stem)
+
+
+def run_cli(*args, cwd=REPO):
+    return subprocess.run([sys.executable, "-m", "tools.lint", *args],
+                          cwd=cwd, capture_output=True, text=True)
+
+
+# --------------------------------------------------------------- rule panel
+
+@pytest.mark.parametrize("src,relpath,expected", fixture_cases())
+def test_fixture_findings_exact(src, relpath, expected):
+    """Every annotated line fires exactly its rule; nothing else fires."""
+    got = {(f.line, f.rule) for f in lint_source(src, relpath).findings}
+    assert got == expected
+
+
+def test_every_rule_has_a_known_bad_fixture():
+    """The fixture suite exercises the WHOLE panel — a new rule without a
+    fixture fails here before it ships unverified."""
+    covered = set()
+    for _src, _rel, expected in (p.values for p in fixture_cases()):
+        covered |= {rule for _line, rule in expected}
+    assert covered == {r.id for r in all_rules()}
+
+
+def test_suppression_counted_not_hidden():
+    src = ("import numpy as np\n"
+           "def f(xs):\n"
+           "    return np.argsort(xs)  # reprolint: ignore[D103]\n")
+    res = lint_source(src, "src/repro/core/x.py")
+    assert res.findings == [] and res.suppressed == 1
+    # a suppression for a DIFFERENT rule does not silence this one
+    src2 = src.replace("[D103]", "[F201]")
+    res2 = lint_source(src2, "src/repro/core/x.py")
+    assert [f.rule for f in res2.findings] == ["D103"]
+
+
+def test_scope_pretend_paths():
+    """The same source fires in sim scope and stays quiet outside it."""
+    src = "import numpy as np\norder = np.argsort([3, 1, 2])\n"
+    assert [f.rule for f in
+            lint_source(src, "src/repro/core/x.py").findings] == ["D103"]
+    assert lint_source(src, "src/repro/models/x.py").findings == []
+
+
+def test_frozen_legacy_store_is_grandfathered_not_clean():
+    """state/legacy.py is the A/B differential baseline and must never be
+    edited — its real D103 finding lives in the committed baseline, not
+    in a fix."""
+    baseline = load_baseline(str(REPO / "tools" / "lint" / "baseline.json"))
+    assert any(k.startswith("D103:src/repro/state/legacy.py:")
+               for k in baseline)
+
+
+# ----------------------------------------------------------------- baseline
+
+def test_baseline_round_trip(tmp_path):
+    src = ("import numpy as np\n"
+           "def f(xs):\n"
+           "    return np.argsort(xs)\n")
+    findings = lint_source(src, "src/repro/core/x.py").findings
+    assert findings
+    bl = tmp_path / "baseline.json"
+    write_baseline(str(bl), findings)
+    new, old = split_new(findings, load_baseline(str(bl)))
+    assert new == [] and old == findings
+
+
+def test_baseline_is_line_shift_resilient():
+    """Keys are rule:path:stripped-line — inserting unrelated lines above
+    a grandfathered finding must not make it 'new'."""
+    src = "import numpy as np\ndef f(xs):\n    return np.argsort(xs)\n"
+    shifted = "import numpy as np\n\n\n\ndef f(xs):\n    return np.argsort(xs)\n"
+    a = lint_source(src, "src/repro/core/x.py").findings
+    b = lint_source(shifted, "src/repro/core/x.py").findings
+    assert a[0].line != b[0].line and a[0].key == b[0].key
+
+
+def test_baseline_multiset_budget():
+    """Two identical violations with one baselined: exactly one is new."""
+    from collections import Counter
+    src = ("import numpy as np\n"
+           "def f(xs):\n"
+           "    return np.argsort(xs)\n"
+           "def g(xs):\n"
+           "    return np.argsort(xs)\n")
+    findings = lint_source(src, "src/repro/core/x.py").findings
+    assert len(findings) == 2 and findings[0].key == findings[1].key
+    new, old = split_new(findings, Counter({findings[0].key: 1}))
+    assert len(new) == 1 and len(old) == 1
+
+
+# ---------------------------------------------------------------------- CLI
+
+def test_cli_clean_on_pr_head():
+    """The committed baseline grandfathers everything that remains: the
+    acceptance gate `python -m tools.lint --fail-on-new` exits 0."""
+    r = run_cli("--fail-on-new", "--quiet")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_fails_with_location_on_injected_regression(tmp_path):
+    bad = tmp_path / "regression.py"
+    bad.write_text("import numpy as np\n"
+                   "def f(xs):\n"
+                   "    return np.argsort(xs)\n")
+    r = run_cli(str(bad), "--fail-on-new")
+    assert r.returncode == 1
+    assert re.search(r"regression\.py:3:\d+: D103", r.stdout)
+
+
+def test_cli_json_schema(tmp_path):
+    bad = tmp_path / "regression.py"
+    bad.write_text("import numpy as np\n"
+                   "def f(xs):\n"
+                   "    return np.argsort(xs)\n")
+    r = run_cli(str(bad), "--json")
+    doc = json.loads(r.stdout)
+    assert doc["version"] == 1
+    assert doc["files"] == 1 and doc["new"] == 1 and doc["baselined"] == 0
+    assert isinstance(doc["suppressed"], int)
+    assert doc["counts"] == {"D103": 1}
+    (f,) = doc["findings"]
+    assert set(f) == {"rule", "severity", "path", "line", "col", "message",
+                      "key", "baselined"}
+    assert f["rule"] == "D103" and f["line"] == 3 and f["baselined"] is False
+    assert f["key"].startswith("D103:") and f["severity"] == "error"
+
+
+def test_cli_self_check_passes():
+    r = run_cli("--self-check", "--quiet")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_list_rules_covers_panel():
+    r = run_cli("--list-rules")
+    assert r.returncode == 0
+    for rule in all_rules():
+        assert rule.id in r.stdout
+
+
+def test_cli_unknown_rule_id_is_an_error():
+    r = run_cli("--rules", "Z999")
+    assert r.returncode != 0

@@ -2,10 +2,11 @@
 (per-tenant attribution, amortized base_mb), and repack/migration cost."""
 import pytest
 
-from repro.core.placement import (MigrationCost, TaskRequest, TMSpec,
-                                  bin_pack, default_tm_spec,
+from repro.core.placement import (MigrationCost, TaskManager, TaskRequest,
+                                  TMSpec, bin_pack, default_tm_spec,
                                   placement_for_config, placement_requests,
                                   repack, shared_pack)
+from repro.core.units import MB_EPS, mem_close, mem_exceeds, mem_fits
 
 
 def reqs(n: int, mb: float, op: str = "op") -> list[TaskRequest]:
@@ -105,3 +106,28 @@ def test_ffd_packing_is_non_monotone():
                      spec)
     assert small.n_tms > big.n_tms                # 3 TMs vs 2
     assert small.memory_mb > big.memory_mb        # 3453 vs 2961
+
+
+def test_fits_tolerates_summation_drift():
+    """0.1 + 0.1 + 0.1 > 0.3 in binary: an epsilon-free budget test
+    denies a task that exactly fills the pool (the Cluster.fits
+    phantom-denial class, PR 6).  TaskManager.fits routes through the
+    blessed repro.core.units.mem_fits and must admit it."""
+    spec = TMSpec(slots=4, managed_pool_mb=0.3)
+    tm = TaskManager(spec)
+    for i in range(2):
+        tm.tasks.append(TaskRequest("op", i, 0.1))
+    assert tm.used_mem + 0.1 > spec.managed_pool_mb     # the raw drift
+    assert tm.fits(TaskRequest("op", 2, 0.1))           # ...is forgiven
+
+
+def test_units_helpers_agree_on_drift():
+    """The three blessed comparisons share ONE tolerance, so admission,
+    growth gating and audit reconciliation can never disagree."""
+    drifted = 0.1 + 0.1 + 0.1
+    assert drifted != 0.3                               # binary float fact
+    assert mem_fits(drifted, 0.3)
+    assert not mem_exceeds(drifted, 0.3)
+    assert mem_close(drifted, 0.3)
+    assert mem_exceeds(0.3 + 2 * MB_EPS, 0.3)           # real growth still
+    assert not mem_fits(0.3 + 2 * MB_EPS, 0.3)          # detected

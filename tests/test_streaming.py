@@ -155,3 +155,27 @@ def test_nexmark_queries_run(qname):
     eng.run(3, 20_000)
     m = eng.collect()
     assert m["source"]["rate_out"] > 0
+
+
+def test_rebalance_chunk_assignment_stable_under_ties():
+    """The round-robin rebalance ranks downstream tasks by queue depth;
+    at >=17 tasks, quicksort's tie order diverges from index order, so
+    which tied task receives the larger chunk would depend on sort
+    internals.  kind="stable" pins it: among ties, lower task index
+    drains first."""
+    f = simple_flow(p=20)
+    eng = StreamEngine(f, seed=0)
+    tasks = eng.tasks["mid"]
+    for i, t in enumerate(tasks):        # interleaved ties: 0,1,0,1,...
+        t.queued_events = i % 2
+    n = 25                               # q=1, r=5: five chunks of 2
+    batch = EventBatch(np.arange(n, dtype=np.int64),
+                       np.zeros((n, 4), np.int32),
+                       np.zeros(n), np.zeros(n, np.int8))
+    before = [t.queued_events for t in tasks]
+    eng._emit("source", batch)
+    deltas = [t.queued_events - b for t, b in zip(tasks, before)]
+    # stable order visits the tied-at-0 tasks 0,2,4,...,18 first, so the
+    # five remainder-carrying chunks land on tasks 0,2,4,6,8 — never on
+    # a quicksort-chosen subset
+    assert deltas == [2, 1] * 5 + [1] * 10

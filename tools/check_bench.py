@@ -198,8 +198,11 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("artifact", nargs="?", default="BENCH_cluster.json")
     ap.add_argument("--baseline", metavar="PATH",
+                    # %% — argparse %-interpolates help strings, so a bare
+                    # "20%" raises TypeError the moment --help renders
                     help="committed reference artifact; fail on >"
-                         f"{REGRESSION_TOLERANCE:.0%} headline regression")
+                         f"{REGRESSION_TOLERANCE * 100:.0f}%% headline "
+                         f"regression")
     args = ap.parse_args()
     try:
         data = _load(args.artifact)

@@ -17,12 +17,14 @@ from collections import Counter
 
 # suite -> minimum collected tests.  The differential harness floor is
 # the PR acceptance criterion (>=200 random op sequences per store pair);
-# the rest just must not vanish.
+# the reprolint floor pins the 12-fixture parametrization plus the
+# baseline/CLI contract tests; the rest just must not vanish.
 SUITES = {
     "tests/test_lsm.py": 1,
     "tests/test_kernels.py": 1,
     "tests/test_lsm_differential.py": 200,
     "tests/test_kernel_parity.py": 1,
+    "tests/test_lint.py": 20,
 }
 
 

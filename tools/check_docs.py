@@ -6,6 +6,10 @@ and verifies it still parses against the current tree:
 * ``python <script>.py ...`` — the script must exist; if it builds an
   argparse CLI it is run with ``--help`` (arg surface must parse), else it
   is byte-compiled (``py_compile``);
+* ``python -m <module> ...`` — the module must resolve in the repo (repo
+  root or ``src/``); it is run with ``--help`` and every documented long
+  flag must appear in the help output (so ``python -m tools.lint
+  --fail-on-new`` breaks this job if the flag is renamed);
 * ``python -m pytest ...`` / ``pytest ...`` — pytest must be importable;
 * ``pip install ...`` — pyproject.toml must exist (never executed: CI
   installs separately and the checker must not mutate the env);
@@ -91,6 +95,48 @@ def extract_commands(path: str) -> list[str]:
     return cmds
 
 
+def _help_smoke(label: str, argv: list[str], toks: list[str]) -> str | None:
+    """Run ``argv + --help`` and verify every documented long flag is part
+    of the advertised CLI surface.  Shared by script and ``-m`` checks."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    try:
+        r = subprocess.run([*argv, "--help"], env=env,
+                           capture_output=True, text=True, timeout=120,
+                           cwd=REPO)
+    except subprocess.TimeoutExpired:
+        return f"`{label} --help` hung (>120 s)"
+    if r.returncode != 0:
+        return f"`{label} --help` exited {r.returncode}: {r.stderr[-300:]}"
+    # every long flag the doc uses must still be part of the CLI surface
+    # (catches a renamed/dropped --policy, --fail-on-new, ... without
+    # running the full command); tokenized so --grid isn't satisfied by
+    # --grid-profiles surviving
+    help_flags = set(re.findall(r"--[A-Za-z0-9][-A-Za-z0-9_]*", r.stdout))
+    missing = [t for t in toks
+               if t.startswith("--") and t != "--help"
+               and t.split("=", 1)[0] not in help_flags]
+    if missing:
+        return (f"`{label} --help` does not mention documented flag(s) "
+                f"{', '.join(missing)}")
+    return None
+
+
+def _module_file(mod: str) -> str | None:
+    """The source file ``python -m mod`` would execute, searched at the
+    repo root (tools.*) and under src/ (repro.*); None when unresolvable."""
+    for base in (os.path.join(REPO, *mod.split(".")),
+                 os.path.join(REPO, "src", *mod.split("."))):
+        if os.path.isdir(base):
+            main = os.path.join(base, "__main__.py")
+            if os.path.exists(main):
+                return main
+        elif os.path.exists(base + ".py"):
+            return base + ".py"
+    return None
+
+
 def check_command(cmd: str, *, static: bool = False) -> str | None:
     """None if the command parses, else a failure description."""
     toks = shlex.split(cmd)
@@ -106,6 +152,24 @@ def check_command(cmd: str, *, static: bool = False) -> str | None:
             return "pytest documented but not importable"
     if rest and rest[0] == "-":                             # heredoc stdin
         return None
+    if rest[:1] == ["-m"] and len(rest) >= 2:
+        mod = rest[1]
+        mpath = _module_file(mod)
+        if mpath is None:
+            return f"documented module does not resolve: {mod}"
+        with open(mpath, encoding="utf-8") as f:
+            src = f.read()
+        # no argparse means --help would EXECUTE the module (and e.g.
+        # render_experiments rewrites EXPERIMENTS.md): compile-only, like
+        # the script path below
+        if "argparse" not in src or static:
+            try:
+                py_compile.compile(mpath, doraise=True)
+                return None
+            except py_compile.PyCompileError as e:
+                return f"{mod} does not compile: {e}"
+        return _help_smoke(f"python -m {mod}",
+                           [sys.executable, "-m", mod], toks)
     script = next((t for t in rest if t.endswith(".py")), None)
     if script is None:
         return None                                         # e.g. python -c
@@ -120,29 +184,7 @@ def check_command(cmd: str, *, static: bool = False) -> str | None:
             return None
         except py_compile.PyCompileError as e:
             return f"{script} does not compile: {e}"
-    env = dict(os.environ,
-               PYTHONPATH=os.path.join(REPO, "src")
-               + os.pathsep + os.environ.get("PYTHONPATH", ""))
-    try:
-        r = subprocess.run([sys.executable, spath, "--help"], env=env,
-                           capture_output=True, text=True, timeout=120,
-                           cwd=REPO)
-    except subprocess.TimeoutExpired:
-        return f"`{script} --help` hung (>120 s)"
-    if r.returncode != 0:
-        return f"`{script} --help` exited {r.returncode}: {r.stderr[-300:]}"
-    # every long flag the doc uses must still be part of the CLI surface
-    # (catches a renamed/dropped --policy, --grid-policies, ... without
-    # running the full command); tokenized so --grid isn't satisfied by
-    # --grid-profiles surviving
-    help_flags = set(re.findall(r"--[A-Za-z0-9][-A-Za-z0-9_]*", r.stdout))
-    missing = [t for t in toks
-               if t.startswith("--") and t != "--help"
-               and t.split("=", 1)[0] not in help_flags]
-    if missing:
-        return (f"`{script} --help` does not mention documented flag(s) "
-                f"{', '.join(missing)}")
-    return None
+    return _help_smoke(script, [sys.executable, spath], toks)
 
 
 def main() -> int:

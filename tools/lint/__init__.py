@@ -1,0 +1,13 @@
+"""reprolint — AST-based invariant linter for the repro codebase.
+
+Run it as ``python -m tools.lint`` (see ``--help``); the framework is
+:mod:`tools.lint.core`, the rule panel :mod:`tools.lint.rules`, and the
+grandfathered findings live in ``tools/lint/baseline.json``.
+"""
+from tools.lint.core import (Finding, LintResult, Rule, all_rules,
+                             lint_paths, lint_source, load_baseline,
+                             register_rule, split_new, write_baseline)
+
+__all__ = ["Finding", "LintResult", "Rule", "all_rules", "lint_paths",
+           "lint_source", "load_baseline", "register_rule", "split_new",
+           "write_baseline"]

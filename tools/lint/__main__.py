@@ -1,0 +1,172 @@
+"""reprolint CLI.
+
+    python -m tools.lint                      # lint src/repro vs baseline
+    python -m tools.lint --fail-on-new        # CI mode: exit 1 on any NEW
+                                              # (non-grandfathered) finding
+    python -m tools.lint --json               # machine-readable report
+    python -m tools.lint --write-baseline     # grandfather current findings
+    python -m tools.lint --self-check         # run the fixture suite
+    python -m tools.lint --list-rules         # the rule panel
+
+Default paths: ``src/repro``.  Default baseline:
+``tools/lint/baseline.json`` (auto-loaded when it exists; pass
+``--baseline ''`` to compare against nothing).  Suppress one finding with
+``# reprolint: ignore[RULE]`` on its line; docs/static-analysis.md has the
+rule table and the how-to-add-a-rule walkthrough.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+# allow `python tools/lint/__main__.py` as well as `python -m tools.lint`
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+
+from collections import Counter
+
+from tools.lint.core import (DEFAULT_BASELINE, DEFAULT_PATHS, REPO,
+                             all_rules, lint_paths, lint_source,
+                             load_baseline, split_new, write_baseline)
+
+FIXTURES = os.path.join(REPO, "tools", "lint", "fixtures")
+_AS_DIRECTIVE = re.compile(r"^#\s*as:\s*(\S+)\s*$", re.MULTILINE)
+_EXPECT = re.compile(r"#\s*expect:\s*([A-Z][0-9]+(?:\s*,\s*[A-Z][0-9]+)*)")
+
+
+def self_check(verbose: bool = True) -> int:
+    """Run the rule panel over its own fixtures: every ``# expect: RULE``
+    line must produce exactly that finding, and nothing else may fire.
+    Exercises rule logic AND the pretend-path scoping (fixtures declare
+    their effective path with a leading ``# as: src/repro/...`` line)."""
+    failures: list[str] = []
+    names = sorted(f for f in os.listdir(FIXTURES) if f.endswith(".py"))
+    if not names:
+        print("self-check: no fixtures found", file=sys.stderr)
+        return 1
+    for name in names:
+        fpath = os.path.join(FIXTURES, name)
+        with open(fpath, encoding="utf-8") as f:
+            src = f.read()
+        m = _AS_DIRECTIVE.search(src)
+        relpath = m.group(1) if m else f"tools/lint/fixtures/{name}"
+        expected: set[tuple[int, str]] = set()
+        for i, line in enumerate(src.splitlines(), 1):
+            em = _EXPECT.search(line)
+            if em:
+                for rule in re.split(r"\s*,\s*", em.group(1)):
+                    expected.add((i, rule))
+        got = {(f.line, f.rule)
+               for f in lint_source(src, relpath).findings}
+        missing = expected - got
+        surprise = got - expected
+        status = "ok " if not missing and not surprise else "FAIL"
+        if verbose:
+            print(f"[{status}] {name} (as {relpath}): "
+                  f"{len(expected)} expected, {len(got)} found")
+        for line, rule in sorted(missing):
+            failures.append(f"{name}:{line}: expected {rule}, not found")
+        for line, rule in sorted(surprise):
+            failures.append(f"{name}:{line}: unexpected {rule}")
+    for msg in failures:
+        print(f"self-check FAIL: {msg}", file=sys.stderr)
+    print(f"self-check: {len(names)} fixtures, {len(failures)} failures")
+    return 1 if failures else 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="reprolint: AST-based invariant linter (determinism, "
+                    "float accounting, registry discipline, units)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to lint (default: src/repro)")
+    ap.add_argument("--baseline", default=None, metavar="JSON",
+                    help="baseline file of grandfathered findings "
+                    "(default: tools/lint/baseline.json when it exists; "
+                    "pass '' for none)")
+    ap.add_argument("--fail-on-new", action="store_true",
+                    help="exit 1 when any finding is not in the baseline")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit a JSON report instead of text")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline file and "
+                    "exit 0")
+    ap.add_argument("--rules", default=None, metavar="IDS",
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule panel and exit")
+    ap.add_argument("--self-check", action="store_true",
+                    help="lint the bundled fixtures against their "
+                    "annotations and exit")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-finding text output")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            scope = ", ".join(rule.scope) if rule.scope else "src/repro"
+            print(f"{rule.id}  [{rule.severity:7s}]  {rule.title}"
+                  f"\n       scope: {scope}"
+                  + (f"\n       exempt: {', '.join(rule.exempt)}"
+                     if rule.exempt else ""))
+        return 0
+    if args.self_check:
+        return self_check(verbose=not args.quiet)
+
+    only = None
+    if args.rules:
+        only = {r.strip() for r in args.rules.split(",") if r.strip()}
+    rules = all_rules(only)
+    paths = args.paths or list(DEFAULT_PATHS)
+    result = lint_paths(paths, rules)
+
+    baseline_path = args.baseline
+    if baseline_path is None and os.path.exists(DEFAULT_BASELINE):
+        baseline_path = DEFAULT_BASELINE
+    if args.write_baseline:
+        out = baseline_path or DEFAULT_BASELINE
+        write_baseline(out, result.findings)
+        print(f"wrote {len(result.findings)} finding(s) to "
+              f"{os.path.relpath(out, REPO)}")
+        return 0
+    baseline = Counter()
+    if baseline_path:
+        baseline = load_baseline(baseline_path)
+    new, grandfathered = split_new(result.findings, baseline)
+
+    if args.as_json:
+        doc = {"version": 1,
+               "files": result.files,
+               "findings": [dict(f.to_dict(), baselined=False)
+                            for f in new]
+               + [dict(f.to_dict(), baselined=True)
+                  for f in grandfathered],
+               "counts": dict(sorted(Counter(
+                   f.rule for f in result.findings).items())),
+               "new": len(new),
+               "baselined": len(grandfathered),
+               "suppressed": result.suppressed}
+        json.dump(doc, sys.stdout, indent=2)
+        print()
+    else:
+        if not args.quiet:
+            for f in new:
+                print(f.render())
+            for f in grandfathered:
+                print(f"{f.render()}  [baselined]")
+        print(f"reprolint: {result.files} files, {len(new)} new finding(s),"
+              f" {len(grandfathered)} baselined,"
+              f" {result.suppressed} suppressed")
+    # exit status keys on NEW findings in both modes: grandfathered
+    # findings are deliberate debt (the baseline is committed), so a
+    # plain run stays green until someone introduces a fresh violation.
+    # --fail-on-new is kept as the explicit CI spelling of the same gate.
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,15 @@
+# as: src/repro/scenarios/acct_bad.py
+"""Known-bad float-accounting fixture: bare MB comparisons and unaudited
+incremental budget counters (the Cluster.fits phantom-denial class)."""
+
+
+class Pool:
+    def fits(self, used_mem, budget_mb):
+        return used_mem <= budget_mb                 # expect: F201
+
+    def grew(self, mem_new, mem_cur):
+        return mem_new > mem_cur                     # expect: F201
+
+    def reserve(self, tenant, mem_mb):
+        self._mem_total += mem_mb                    # expect: F202
+        self._cpu_total += 1                         # expect: F202

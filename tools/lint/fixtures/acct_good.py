@@ -1,0 +1,20 @@
+# as: src/repro/scenarios/acct_good.py
+"""Known-good float-accounting fixture: the blessed epsilon helpers (or
+an explicit eps term) and audited counter maintenance."""
+from repro.core.units import MB_EPS, mem_fits
+
+
+class Pool:
+    def fits(self, used_mem, budget_mb):
+        return mem_fits(used_mem, budget_mb)
+
+    def grew(self, mem_new, mem_cur, eps=MB_EPS):
+        return mem_new > mem_cur + eps
+
+    def empty(self, used_mem):
+        return used_mem == 0                         # zero checks are safe
+
+    def reserve(self, tenant, mem_mb):
+        self._mem_total += mem_mb
+        self._cpu_total += 1
+        assert self._mem_total <= self.budget_mb + MB_EPS

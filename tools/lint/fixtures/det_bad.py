@@ -1,0 +1,22 @@
+# as: src/repro/core/det_bad.py
+"""Known-bad determinism fixture: every D-rule fires where annotated."""
+import random
+import time
+from datetime import datetime
+
+import numpy as np
+
+
+def pick_tasks(tasks, ids):
+    rng = np.random.default_rng()                    # expect: D101
+    noise = np.random.normal(0.0, 1.0)               # expect: D101
+    jitter = random.random()                         # expect: D101
+    t0 = time.time()                                 # expect: D102
+    stamp = datetime.now()                           # expect: D102
+    order = np.argsort([t.load for t in tasks])      # expect: D103
+    order2 = np.argsort(ids, kind="quicksort")       # expect: D103
+    for tid in {1, 2, 3}:                            # expect: D104
+        tasks.append(tid)
+    picked = [t for t in set(ids)]                   # expect: D104
+    listed = list({4, 5})                            # expect: D104
+    return rng, noise, jitter, t0, stamp, order, order2, picked, listed

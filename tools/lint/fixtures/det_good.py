@@ -1,0 +1,15 @@
+# as: src/repro/core/det_good.py
+"""Known-good determinism fixture: seeded streams, simulated time, stable
+sorts, sorted set iteration — nothing fires."""
+import numpy as np
+
+
+def pick_tasks(tasks, ids, seed, engine):
+    rng = np.random.default_rng(seed)
+    noise = rng.normal(0.0, 1.0)
+    now = engine.now
+    order = np.argsort([t.load for t in tasks], kind="stable")
+    for tid in sorted({1, 2, 3}):
+        tasks.append(tid)
+    picked = [t for t in sorted(set(ids))]
+    return rng, noise, now, order, picked

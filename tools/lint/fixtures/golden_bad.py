@@ -1,0 +1,13 @@
+# as: src/repro/core/justin.py
+"""Known-bad golden-module fixture: the pretend path is one of the
+golden-trace-critical modules, where nondeterminism imports are banned
+outright (R305) — even unused ones."""
+import random                                        # expect: R305
+import time                                          # expect: R305
+from datetime import datetime                        # expect: R305
+
+import numpy as np
+
+
+def jitter(xs):
+    return np.asarray(xs)

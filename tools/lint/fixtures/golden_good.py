@@ -1,0 +1,14 @@
+# as: src/repro/streaming/engine.py
+"""Known-good golden-module fixture: numpy and repro imports are fine in
+golden-trace-critical modules; stable sorts pass D103."""
+import numpy as np
+
+from repro.core.units import mem_fits
+
+
+def level_rank(levels):
+    return np.argsort(levels, kind="stable")
+
+
+def fits(used_mb, pool_mb):
+    return mem_fits(used_mb, pool_mb)

@@ -1,0 +1,22 @@
+# as: src/repro/serve/registry_good.py
+"""Known-good registry-discipline fixture: registry construction paths
+and read-only history access."""
+from repro.core.policy import ScalingPolicy, make_policy, register_policy
+from repro.state.lsm import make_store
+
+
+def build(cfg, capacity_mb):
+    policy = make_policy(cfg.policy)
+    store = make_store(capacity_mb)
+    return policy, store
+
+
+@register_policy("shadow")
+class ShadowPolicy(ScalingPolicy):
+    def decide(self, window):
+        return None
+
+
+def read_history(run):
+    latest = run.history[-1]
+    return latest.admitted

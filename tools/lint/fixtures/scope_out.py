@@ -1,0 +1,14 @@
+# as: src/repro/models/scope_out.py
+"""Out-of-scope fixture: the pretend path (models/) is jax-side code,
+outside every D/F scope — wall clock, unseeded RNGs and unstable sorts
+are benchmarking concerns there, not determinism leaks."""
+import time
+
+import numpy as np
+
+
+def benchmark(f, xs):
+    t0 = time.time()
+    rng = np.random.default_rng()
+    order = np.argsort(xs)
+    return f(xs), time.time() - t0, rng, order

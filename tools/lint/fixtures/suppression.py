@@ -1,0 +1,12 @@
+# as: src/repro/core/suppression.py
+"""Suppression fixture: inline ignores silence findings (and are counted
+in the run summary, so they can't hide silently)."""
+import numpy as np
+
+
+def arbitrary_rank(xs):
+    return np.argsort(xs)  # reprolint: ignore[D103]
+
+
+def any_rule(xs):
+    return np.argsort(xs)  # reprolint: ignore

@@ -1,0 +1,14 @@
+# as: src/repro/migration/units_bad.py
+"""Known-bad units fixture: MB crossing a seconds-typed call boundary,
+caught by parameter-name conventions (keyword and positional binding)."""
+
+
+def schedule_move(task, downtime_s, cpu_slots):
+    return task, downtime_s, cpu_slots
+
+
+def plan(task, shard_mb, n_cores):
+    moved = schedule_move(task, shard_mb, n_cores)   # expect: U401
+    retry = schedule_move(task, downtime_s=shard_mb,  # expect: U401
+                          cpu_slots=n_cores)
+    return moved, retry

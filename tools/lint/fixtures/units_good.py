@@ -1,0 +1,14 @@
+# as: src/repro/migration/units_good.py
+"""Known-good units fixture: units agree across the call boundary, and
+dimensionless names (factors/ratios) carry no unit at all."""
+
+
+def schedule_move(task, downtime_s, cpu_slots):
+    return task, downtime_s, cpu_slots
+
+
+def plan(task, pause_s, n_cores, rate_factor):
+    moved = schedule_move(task, pause_s, n_cores)
+    scaled = schedule_move(task, downtime_s=pause_s,
+                          cpu_slots=n_cores)
+    return moved, scaled, rate_factor
