@@ -291,10 +291,15 @@ class LSMStore:
         # (levels bottom-up, then tiers bottom-up, then delta runs in
         # arrival order) so the stable sort keeps the newest payload last
         # in each key group — cheaper than a pairwise merge cascade.
-        sources = (self.levels[::-1] + self._tiers[::-1] + self._runs)
+        sources = [s for s in (self.levels[::-1] + self._tiers[::-1]
+                               + self._runs) if len(s[0])]
         acc = self._collapse(sources)
-        # all arrays here are frozen by construction (consolidation and
-        # merges always allocate; nothing writes a published run in place)
+        if len(sources) == 1:
+            # single live source: _collapse passes the run's arrays
+            # through untouched, so hand the caller copies — items() and
+            # snapshot() are public, and a caller mutating (or keeping)
+            # these across a put_batch must not corrupt the live run
+            acc = tuple(a.copy() for a in acc)
         return acc
 
     # ---------------------------------------------------------- kernel hooks
@@ -555,8 +560,18 @@ class LSMStore:
             T = None
             if self.kernel_impl != "pallas":
                 T, offs, srcs = self._mem_concat()
-            if T is not None and len(T):
+            fast = False
+            if T is not None and len(T) and len(uq):
+                # stored keys are in [0, 2^45) (else _mem_concat bailed),
+                # but QUERY keys arrive unchecked: a query outside that
+                # range would land in another source's band after packing
+                # and false-hit its keys, so such batches (and empty
+                # query sets) take the per-run fallback below
+                lim = np.int64(1) << self._MEM_SHIFT
+                fast = bool(int(uq[0]) >= 0 and int(uq[-1]) < lim)
+            if fast:
                 R = len(srcs)
+                assert R < (1 << 18)   # source ids share the 63-45 headroom
                 nu = len(uq)
                 qq = ((np.arange(R, dtype=np.int64)[:, None]
                        << self._MEM_SHIFT) + uq[None, :]).ravel()
@@ -716,22 +731,26 @@ class LSMStore:
         if c is not None and c[0] == ids:
             return c[1], c[2], c[3]
         lim = np.int64(1) << self._MEM_SHIFT
+        n_src = len(srcs)
+        assert n_src < (1 << 18)         # source ids must fit 63-45 bits
         if c is not None and len(ids) == len(c[0]) + 1 \
                 and c[0] == ids[:-1]:
             rk = srcs[-1][0]             # one new run appended at the end
             if len(rk) and (rk[0] < 0 or rk[-1] >= lim):
                 self._mbt = None
                 return None, None, None
+            nprev = len(c[0])
+            assert nprev < n_src         # its band is the next source id
             T = np.concatenate(
-                [c[1], (np.int64(len(c[0])) << self._MEM_SHIFT) + rk])
+                [c[1], (np.int64(nprev) << self._MEM_SHIFT) + rk])
             offs = c[2] + [len(c[1])]
         else:
-            for (rk, _w, _v) in srcs:
+            parts = []
+            for i, (rk, _w, _v) in enumerate(srcs):
                 if len(rk) and (rk[0] < 0 or rk[-1] >= lim):
                     self._mbt = None
                     return None, None, None
-            parts = [(np.int64(i) << self._MEM_SHIFT) + rk
-                     for i, (rk, _w, _v) in enumerate(srcs)]
+                parts.append((np.int64(i) << self._MEM_SHIFT) + rk)
             T = np.concatenate(parts) if parts else np.empty(0, np.int64)
             offs, o = [], 0
             for p in parts:
@@ -813,6 +832,9 @@ class LSMStore:
         count divides evenly).  Bit-identical to the sequential scan, with
         no per-round work.
         """
+        # set indices come from ``_sets`` (mod cache_sets), but arrive here
+        # as a bare parameter: pin the range the uint16 radix cast needs
+        assert int(sets.min()) >= 0 and int(sets.max()) < self.cache_sets
         # numpy's stable argsort radix-sorts <=16-bit ints (13x faster than
         # the int64 mergesort); set indices usually fit
         ss = sets.astype(np.uint16) if self.cache_sets <= (1 << 16) else sets

@@ -225,6 +225,7 @@ class StreamEngine:
             return
         node = self.flow.nodes[name]
         p = len(self.tasks[name])
+        assert p <= (1 << 16)    # partition ids must survive the uint16
         dk = [[] for _ in range(p)]          # key-sorted run fragments
         dw = [[] for _ in range(p)]
         dv = [[] for _ in range(p)]

@@ -17,14 +17,17 @@ from collections import Counter
 
 # suite -> minimum collected tests.  The differential harness floor is
 # the PR acceptance criterion (>=200 random op sequences per store pair);
-# the reprolint floor pins the 12-fixture parametrization plus the
-# baseline/CLI contract tests; the rest just must not vanish.
+# the reprolint floor pins the 19-fixture parametrization (per-file
+# rules AND the PR 9 interprocedural passes) plus the baseline/CLI
+# contract and cross-file pass tests; the packed-key floor pins the
+# bit-width/aliasing regression suite; the rest just must not vanish.
 SUITES = {
     "tests/test_lsm.py": 1,
     "tests/test_kernels.py": 1,
     "tests/test_lsm_differential.py": 200,
     "tests/test_kernel_parity.py": 1,
-    "tests/test_lint.py": 20,
+    "tests/test_lint.py": 38,
+    "tests/test_packed_key_bounds.py": 14,
 }
 
 

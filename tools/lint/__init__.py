@@ -1,13 +1,17 @@
 """reprolint — AST-based invariant linter for the repro codebase.
 
 Run it as ``python -m tools.lint`` (see ``--help``); the framework is
-:mod:`tools.lint.core`, the rule panel :mod:`tools.lint.rules`, and the
-grandfathered findings live in ``tools/lint/baseline.json``.
+:mod:`tools.lint.core`, the per-file rule panel :mod:`tools.lint.rules`,
+the interprocedural passes :mod:`tools.lint.taint` /
+:mod:`tools.lint.bitwidth` / :mod:`tools.lint.effects` (all sharing the
+call graph from :mod:`tools.lint.callgraph`), and the grandfathered
+findings live in ``tools/lint/baseline.json``.
 """
-from tools.lint.core import (Finding, LintResult, Rule, all_rules,
-                             lint_paths, lint_source, load_baseline,
-                             register_rule, split_new, write_baseline)
+from tools.lint.core import (Finding, LintResult, Program, Rule, all_rules,
+                             get_callgraph, lint_paths, lint_source,
+                             load_baseline, parse_file, register_rule,
+                             split_new, write_baseline)
 
-__all__ = ["Finding", "LintResult", "Rule", "all_rules", "lint_paths",
-           "lint_source", "load_baseline", "register_rule", "split_new",
-           "write_baseline"]
+__all__ = ["Finding", "LintResult", "Program", "Rule", "all_rules",
+           "get_callgraph", "lint_paths", "lint_source", "load_baseline",
+           "parse_file", "register_rule", "split_new", "write_baseline"]

@@ -7,6 +7,8 @@
     python -m tools.lint --write-baseline     # grandfather current findings
     python -m tools.lint --self-check         # run the fixture suite
     python -m tools.lint --list-rules         # the rule panel
+    python -m tools.lint --changed-only       # analyze everything, report
+                                              # only git-changed files
 
 Default paths: ``src/repro``.  Default baseline:
 ``tools/lint/baseline.json`` (auto-loaded when it exists; pass
@@ -20,6 +22,7 @@ import argparse
 import json
 import os
 import re
+import subprocess
 import sys
 
 # allow `python tools/lint/__main__.py` as well as `python -m tools.lint`
@@ -29,8 +32,9 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(
 from collections import Counter
 
 from tools.lint.core import (DEFAULT_BASELINE, DEFAULT_PATHS, REPO,
-                             all_rules, lint_paths, lint_source,
-                             load_baseline, split_new, write_baseline)
+                             all_rules, collect_files, lint_paths,
+                             lint_source, load_baseline, split_new,
+                             write_baseline)
 
 FIXTURES = os.path.join(REPO, "tools", "lint", "fixtures")
 _AS_DIRECTIVE = re.compile(r"^#\s*as:\s*(\S+)\s*$", re.MULTILINE)
@@ -77,6 +81,23 @@ def self_check(verbose: bool = True) -> int:
     return 1 if failures else 0
 
 
+def changed_relpaths() -> set[str]:
+    """Repo-relative paths touched vs HEAD (staged + unstaged + untracked).
+    The *reported* scope for ``--changed-only``; the whole program is
+    still parsed and analyzed so interprocedural facts stay exact."""
+    out: set[str] = set()
+    for cmd in (["git", "diff", "--name-only", "HEAD"],
+                ["git", "ls-files", "--others", "--exclude-standard"]):
+        proc = subprocess.run(cmd, cwd=REPO, capture_output=True, text=True)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"--changed-only needs git: `{' '.join(cmd)}` failed: "
+                f"{proc.stderr.strip()}")
+        out.update(line.strip().replace(os.sep, "/")
+                   for line in proc.stdout.splitlines() if line.strip())
+    return out
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m tools.lint",
@@ -102,6 +123,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--self-check", action="store_true",
                     help="lint the bundled fixtures against their "
                     "annotations and exit")
+    ap.add_argument("--changed-only", action="store_true",
+                    help="report findings only in files changed vs HEAD "
+                    "(git diff + untracked); the whole program is still "
+                    "analyzed so interprocedural results are identical")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-finding text output")
     args = ap.parse_args(argv)
@@ -122,7 +147,19 @@ def main(argv: list[str] | None = None) -> int:
         only = {r.strip() for r in args.rules.split(",") if r.strip()}
     rules = all_rules(only)
     paths = args.paths or list(DEFAULT_PATHS)
-    result = lint_paths(paths, rules)
+    emit_only = None
+    if args.changed_only:
+        if args.write_baseline:
+            ap.error("--changed-only cannot be combined with "
+                     "--write-baseline (baselines must cover the whole "
+                     "program)")
+        try:
+            changed = changed_relpaths()
+        except RuntimeError as exc:
+            print(f"error: {exc}", file=sys.stderr)
+            return 2
+        emit_only = set(collect_files(paths)) & changed
+    result = lint_paths(paths, rules, emit_only=emit_only)
 
     baseline_path = args.baseline
     if baseline_path is None and os.path.exists(DEFAULT_BASELINE):
@@ -158,7 +195,10 @@ def main(argv: list[str] | None = None) -> int:
                 print(f.render())
             for f in grandfathered:
                 print(f"{f.render()}  [baselined]")
-        print(f"reprolint: {result.files} files, {len(new)} new finding(s),"
+        scope = (f" ({len(emit_only)} changed reported)"
+                 if emit_only is not None else "")
+        print(f"reprolint: {result.files} files{scope},"
+              f" {len(new)} new finding(s),"
               f" {len(grandfathered)} baselined,"
               f" {result.suppressed} suppressed")
     # exit status keys on NEW findings in both modes: grandfathered

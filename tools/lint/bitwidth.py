@@ -1,0 +1,915 @@
+"""B601 — bit-width / overflow proofs for the packed-key kernels.
+
+The columnar LSM and the engine's partition installer both pack two
+quantities into one int64 word so a single stable sort / searchsorted
+can do the work of many (``(i << 45) | key`` source-major probes,
+``(set << 47) | key`` fused prewarm sorts, uint16 radix casts of
+partition ids).  The packing is silently wrong the moment the low field
+leaves ``[0, 2**shift)`` (bands collide) or the shifted field overflows
+int64 (sign flips reorder the sort) — and nothing at runtime notices,
+because the result is still a perfectly sortable array of ints.
+
+B601 walks each function with a forward abstract interpretation over an
+integer interval domain and demands a *proof* at every packing site:
+
+* ``(A << C) | B`` / ``(A << C) + B`` with a resolvable constant
+  ``C >= 8``:  requires ``B ⊆ [0, 2**C)`` and ``0 <= A < 2**(63 - C)``.
+* ``x.astype(<narrow dtype>)`` feeding ``np.argsort`` (directly or
+  through one local assignment): requires ``x`` within the dtype's
+  range — a truncating cast reorders the radix sort.
+
+Facts come from ``assert``s, early-return ``if`` guards and guarding
+conditions (``and`` conjunctions, negated ``or``s), with repo-specific
+conventions documented here because the proofs lean on them:
+
+* ``x[0]``/``x[-1]``/``x.min()``/``x.max()``/``int(...)`` comparisons
+  bound ``x`` **elementwise** — the packed-key arrays are sorted by
+  construction, so first/last-element guards are total.
+* ``len(x) and <cond>`` guards refine ``<cond>`` on negation: an empty
+  array satisfies any elementwise bound vacuously.
+* A boolean assigned from a comparison (``ok = bool(a <= b)``) carries
+  its refinement to a later ``if ok:`` (the condition's names are
+  evaluated in the environment captured at the assignment).
+* ``x % e`` with a non-constant divisor yields the *symbolic* interval
+  ``[0, e - 1]``, resolved against ``e``'s bounds at the use site — how
+  ``hash_partition``/``_sets`` results inherit ``p <= 2**16`` /
+  ``cache_sets <= 2**15`` guards.
+* Calls to in-program functions (via the shared call graph) are
+  summarized by inlining their bodies one level deep with the caller's
+  argument intervals — checks are only *emitted* at inline depth 0, so
+  each site is reported in its own function exactly once.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import FileUnit, Finding, Rule, dotted, get_callgraph, \
+    register_rule
+
+INT64_MAX = (1 << 63) - 1
+_NARROW = {"uint8": (0, 255), "int8": (-128, 127),
+           "uint16": (0, (1 << 16) - 1), "int16": (-(1 << 15), (1 << 15) - 1),
+           "uint32": (0, (1 << 32) - 1), "int32": (-(1 << 31), (1 << 31) - 1)}
+_IDENT_METHODS = {"ravel", "min", "max", "copy", "reshape", "flatten",
+                  "astype", "sum"}          # sum only via explicit handling
+
+Bound = object    # int | None (unbounded) | ("sym", key, delta)
+
+
+def _is_sym(b) -> bool:
+    return isinstance(b, tuple) and len(b) == 3 and b[0] == "sym"
+
+
+class Interval:
+    __slots__ = ("lo", "hi")
+
+    def __init__(self, lo=None, hi=None):
+        self.lo, self.hi = lo, hi
+
+    def __repr__(self):
+        return f"[{self.lo}, {self.hi}]"
+
+    def copy(self) -> "Interval":
+        return Interval(self.lo, self.hi)
+
+
+TOP = Interval()
+
+
+def const(v: int) -> Interval:
+    return Interval(v, v)
+
+
+def _resolve(b, env) -> int | None:
+    """Concretize a bound against the current environment (symbolic
+    ``[0, e-1]`` moduli pick up later guards on ``e``)."""
+    if _is_sym(b):
+        ref = env.get(b[1])
+        if ref is None or not isinstance(ref.hi, int):
+            return None
+        return ref.hi + b[2]
+    return b if isinstance(b, int) else None
+
+
+def _hull(a: Interval, b: Interval) -> Interval:
+    lo = a.lo if (isinstance(a.lo, int) and isinstance(b.lo, int)
+                  and a.lo <= b.lo) else (b.lo if (
+                      isinstance(a.lo, int) and isinstance(b.lo, int))
+                      else None)
+    hi = None
+    if isinstance(a.hi, int) and isinstance(b.hi, int):
+        hi = max(a.hi, b.hi)
+    elif _is_sym(a.hi) and a.hi == b.hi:
+        hi = a.hi
+    if _is_sym(a.lo) or _is_sym(b.lo):
+        lo = None
+    return Interval(lo, hi)
+
+
+def _key_of(node: ast.AST) -> str | None:
+    """The environment key an expression's *elementwise* bounds live
+    under: bare names, dotted self-attrs, and the blessed elementwise
+    wrappers (``x[0]``, ``x[-1]``, ``x.min()``, ``x.max()``, ``int()``,
+    ``np.int64()``)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        chain = dotted(node)
+        if chain and chain[0] in ("self", "cls"):
+            return ".".join(chain)
+        return None
+    if isinstance(node, ast.Subscript):
+        sl = node.slice
+        if isinstance(sl, ast.Constant) and isinstance(sl.value, int):
+            return _key_of(node.value)
+        if isinstance(sl, ast.UnaryOp) and isinstance(sl.op, ast.USub) \
+                and isinstance(sl.operand, ast.Constant):
+            return _key_of(node.value)
+        return None
+    if isinstance(node, ast.Call):
+        chain = dotted(node.func)
+        if chain and chain[-1] in ("min", "max") and len(chain) >= 2 \
+                and not node.args:
+            return _key_of(node.func.value)
+        if chain in (("int",), ("np", "int64"), ("numpy", "int64")) \
+                and len(node.args) == 1:
+            return _key_of(node.args[0])
+        return None
+    return None
+
+
+# predicate binding for a variable that is statically falsy on this path
+# (``fast = False``): its ``if fast:`` branch can only be entered via a
+# REAL binding from another path, so merged preds keep the other side
+_NEVER = ("__never__", None)
+
+
+class State:
+    def __init__(self):
+        self.env: dict[str, Interval] = {}
+        self.lens: dict[str, str] = {}      # container name -> len() var
+        self.preds: dict[str, tuple[ast.AST, dict]] = {}  # bool var -> cond
+
+    def copy(self) -> "State":
+        s = State()
+        s.env = {k: v.copy() for k, v in self.env.items()}
+        s.lens = dict(self.lens)
+        s.preds = dict(self.preds)
+        return s
+
+
+class _Analyzer:
+    """One function's forward walk.  ``emit`` collects findings; inline
+    summaries run with ``emit=False`` (depth > 0)."""
+
+    def __init__(self, rule: "PackedKeyBitwidth", unit: FileUnit,
+                 consts: dict[str, int], cls_consts: dict[str, int],
+                 call_targets, depth: int = 0):
+        self.rule = rule
+        self.unit = unit
+        self.consts = consts            # module-level integer constants
+        self.cls_consts = cls_consts    # "self.X" -> int for this class
+        self.call_targets = call_targets  # id(Call) -> list[FuncNode]
+        self.depth = depth
+        self.returns: list[Interval] = []
+        self.argsort_args: set[int] = set()   # id() of argsort arg subtrees
+        self.argsort_names: set[str] = set()  # names later fed to argsort
+        self.flagged: set[int] = set()        # one finding per site
+
+    # ------------------------------------------------------------- findings
+    def _flag(self, node: ast.AST, msg: str) -> None:
+        if self.depth == 0 and id(node) not in self.flagged:
+            self.flagged.add(id(node))
+            self.rule._found.append(self.unit.finding(self.rule, node, msg))
+
+    # ------------------------------------------------------------- evaluate
+    def eval(self, node: ast.AST, st: State) -> Interval:
+        if isinstance(node, ast.Constant):
+            if isinstance(node.value, bool):
+                return const(int(node.value))
+            if isinstance(node.value, int):
+                return const(node.value)
+            return TOP
+        if isinstance(node, ast.Name):
+            if node.id in st.env:
+                return st.env[node.id]
+            if node.id in self.consts:
+                return const(self.consts[node.id])
+            return TOP
+        if isinstance(node, ast.Attribute):
+            chain = dotted(node)
+            if chain and chain[0] in ("self", "cls"):
+                key = ".".join(chain)
+                if key in st.env:
+                    return st.env[key]
+                ckey = "self." + chain[-1]
+                if ckey in self.cls_consts:
+                    return const(self.cls_consts[ckey])
+            return TOP
+        if isinstance(node, ast.UnaryOp):
+            v = self.eval(node.operand, st)
+            if isinstance(node.op, ast.USub):
+                lo = -v.hi if isinstance(v.hi, int) else None
+                hi = -v.lo if isinstance(v.lo, int) else None
+                return Interval(lo, hi)
+            return TOP
+        if isinstance(node, ast.Subscript):
+            return self.eval(node.value, st)     # elementwise bounds
+        if isinstance(node, ast.IfExp):
+            a, b = st.copy(), st.copy()
+            refine(a, node.test, True, self)
+            refine(b, node.test, False, self)
+            return _hull(self.eval(node.body, a), self.eval(node.orelse, b))
+        if isinstance(node, ast.BoolOp):
+            for v in node.values:
+                self.eval(v, st)
+            return TOP
+        if isinstance(node, ast.Compare):
+            self.eval(node.left, st)
+            for c in node.comparators:
+                self.eval(c, st)
+            return Interval(0, 1)
+        if isinstance(node, (ast.ListComp, ast.GeneratorExp, ast.SetComp)):
+            return self._comp(node, st)
+        if isinstance(node, ast.BinOp):
+            return self._binop(node, st)
+        if isinstance(node, ast.Call):
+            return self._call(node, st)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            out = None
+            for e in node.elts:
+                v = self.eval(e, st)
+                out = v if out is None else _hull(out, v)
+            return out or TOP
+        return TOP
+
+    def _binop(self, node: ast.BinOp, st: State) -> Interval:
+        l, r = self.eval(node.left, st), self.eval(node.right, st)
+        llo, lhi = _resolve(l.lo, st.env), _resolve(l.hi, st.env)
+        rlo, rhi = _resolve(r.lo, st.env), _resolve(r.hi, st.env)
+        if isinstance(node.op, (ast.BitOr, ast.Add)):
+            self._check_packing(node, st)
+        if isinstance(node.op, ast.Add):
+            return Interval(
+                llo + rlo if None not in (llo, rlo) else None,
+                lhi + rhi if None not in (lhi, rhi) else None)
+        if isinstance(node.op, ast.Sub):
+            return Interval(
+                llo - rhi if None not in (llo, rhi) else None,
+                lhi - rlo if None not in (lhi, rlo) else None)
+        if isinstance(node.op, ast.Mult):
+            if None not in (llo, lhi, rlo, rhi):
+                corners = [llo * rlo, llo * rhi, lhi * rlo, lhi * rhi]
+                return Interval(min(corners), max(corners))
+            return TOP
+        if isinstance(node.op, ast.LShift):
+            if rlo is not None and rlo == rhi and rlo >= 0:
+                return Interval(
+                    llo << rlo if llo is not None and llo >= 0 else None,
+                    lhi << rlo if lhi is not None and lhi >= 0 else None)
+            return TOP
+        if isinstance(node.op, ast.RShift):
+            if rlo is not None and rlo == rhi and rlo >= 0 \
+                    and llo is not None and llo >= 0:
+                return Interval(llo >> rlo,
+                                lhi >> rlo if lhi is not None else None)
+            return TOP
+        if isinstance(node.op, ast.BitOr):
+            if llo is not None and llo >= 0 and rlo is not None and rlo >= 0:
+                if lhi is not None and rhi is not None:
+                    bits = max(lhi.bit_length(), rhi.bit_length())
+                    return Interval(max(llo, rlo), (1 << bits) - 1)
+                return Interval(0, None)
+            return TOP
+        if isinstance(node.op, ast.BitAnd):
+            for mhi in (lhi, rhi):
+                if mhi is not None and mhi >= 0 and (
+                        (mhi is lhi and llo == lhi) or
+                        (mhi is rhi and rlo == rhi)):
+                    return Interval(0, mhi)
+            return TOP
+        if isinstance(node.op, ast.Mod):
+            if rlo is not None and rlo == rhi and rlo > 0:
+                return Interval(0, rlo - 1)
+            key = _key_of(node.right)
+            if key is not None:
+                return Interval(0, ("sym", key, -1))
+            return TOP
+        if isinstance(node.op, ast.FloorDiv):
+            if rlo is not None and rlo == rhi and rlo > 0 \
+                    and llo is not None and llo >= 0:
+                return Interval(llo // rlo,
+                                lhi // rlo if lhi is not None else None)
+            return TOP
+        if isinstance(node.op, ast.Pow):
+            if None not in (llo, rlo) and llo == lhi and rlo == rhi \
+                    and 0 <= rlo <= 64 and abs(llo) <= 4096:
+                return const(llo ** rlo)
+            return TOP
+        return TOP
+
+    def _call(self, node: ast.Call, st: State) -> Interval:
+        chain = dotted(node.func)
+        if chain in (("len",),) and len(node.args) == 1:
+            return Interval(0, None)
+        if chain in (("int",), ("bool",), ("abs",)) and len(node.args) == 1:
+            v = self.eval(node.args[0], st)
+            if chain == ("abs",):
+                hi = _resolve(v.hi, st.env)
+                lo = _resolve(v.lo, st.env)
+                if hi is not None and lo is not None:
+                    return Interval(0, max(abs(lo), abs(hi)))
+                return Interval(0, None)
+            return v
+        if chain and chain[-1] in ("int64", "uint64", "int32", "uint32",
+                                   "int16", "uint16", "int8", "uint8") \
+                and len(chain) >= 2 and chain[0] in ("np", "numpy") \
+                and len(node.args) == 1:
+            return self.eval(node.args[0], st)
+        if chain and chain[-1] == "arange" and node.args:
+            if len(node.args) == 1:
+                n = self.eval(node.args[0], st)
+                hi = _resolve(n.hi, st.env)
+                return Interval(0, hi - 1 if hi is not None else None)
+            a = self.eval(node.args[0], st)
+            b = self.eval(node.args[1], st)
+            bhi = _resolve(b.hi, st.env)
+            return Interval(_resolve(a.lo, st.env),
+                            bhi - 1 if bhi is not None else None)
+        if chain in (("min",), ("max",)) and len(node.args) >= 2:
+            vals = [self.eval(a, st) for a in node.args]
+            los = [_resolve(v.lo, st.env) for v in vals]
+            his = [_resolve(v.hi, st.env) for v in vals]
+            if chain == ("max",):
+                lo = max([l for l in los if l is not None], default=None)
+                hi = None if None in his else max(his)
+            else:
+                lo = None if None in los else min(los)
+                hi = min([h for h in his if h is not None], default=None)
+            return Interval(lo, hi)
+        if chain and chain[-1] == "astype":
+            v = self.eval(node.func.value, st)
+            self._check_astype(node, v, st)
+            tgt = self._astype_dtype(node)
+            if tgt in _NARROW:
+                lo, hi = _NARROW[tgt]
+                vlo, vhi = _resolve(v.lo, st.env), _resolve(v.hi, st.env)
+                return Interval(max(lo, vlo) if vlo is not None else lo,
+                                min(hi, vhi) if vhi is not None else hi)
+            return v
+        if chain and len(chain) >= 2 and chain[-1] in _IDENT_METHODS \
+                and chain[-1] not in ("astype", "sum"):
+            return self.eval(node.func.value, st)
+        # uninterpreted call: still DESCEND so packing/astype checks
+        # inside receivers and arguments run ((x << 45 | y).ravel(),
+        # np.argsort(part.astype(...)), parts.append(pack))
+        if isinstance(node.func, ast.Attribute):
+            self.eval(node.func.value, st)
+        for a in node.args:
+            self.eval(a.value if isinstance(a, ast.Starred) else a, st)
+        for kw in node.keywords:
+            self.eval(kw.value, st)
+        # in-program callee: inline one level with the caller's arguments
+        return self._inline(node, st)
+
+    def _comp(self, node, st: State) -> Interval:
+        """Evaluate a comprehension body with its targets bound, so
+        packing checks inside list-comp elements run (the ``parts``
+        pack loop in ``_mem_concat``)."""
+        cst = st.copy()
+        for gen in node.generators:
+            shim = ast.For(target=gen.target, iter=gen.iter, body=[],
+                           orelse=[])
+            self._bind_loop_target(shim, cst)
+            for cond in gen.ifs:
+                self.eval(cond, cst)
+                refine(cst, cond, True, self)
+        return self.eval(node.elt, cst)
+
+    def _inline(self, node: ast.Call, st: State) -> Interval:
+        if self.depth >= 2:
+            return TOP
+        targets = self.call_targets.get(id(node), ())
+        if len(targets) != 1:
+            return TOP
+        fn = targets[0]
+        body = getattr(fn.node, "body", None)
+        if body is None or len(body) > 60:
+            return TOP
+        args = list(fn.node.args.args)
+        is_method = bool(args) and args[0].arg in ("self", "cls")
+        params = args[1:] if is_method else args
+        sub = _Analyzer(self.rule, self.rule._unit_of.get(fn.relpath,
+                                                          self.unit),
+                        self.rule._consts.get(fn.relpath, {}),
+                        self.rule._cls_consts.get((fn.relpath, fn.cls), {}),
+                        self.rule._targets_of(fn.relpath),
+                        depth=self.depth + 1)
+        cst = State()
+        for p, a in zip(params, node.args):
+            cst.env[p.arg] = self.eval(a, st)
+        chain = dotted(node.func)
+        if chain and chain[0] in ("self", "cls"):
+            # same receiver: self.* facts carry into the callee
+            for k, v in st.env.items():
+                if k.startswith("self."):
+                    cst.env[k] = v.copy()
+        sub.process(body, cst)
+        out = None
+        for r in sub.returns:
+            out = r if out is None else _hull(out, r)
+        if out is None:
+            return TOP
+        # symbolic bounds in the callee's frame must be translated into
+        # the caller's: a param key maps through the argument's name
+        # (hash_partition's [0, p-1] follows the caller's p); self.* keys
+        # survive only for a self.m() call (same receiver); anything
+        # else resolves concretely in the callee env or drops to None
+        argmap = {p.arg: _key_of(a)
+                  for p, a in zip(params, node.args) if _key_of(a)}
+        same_self = bool(chain) and chain[0] in ("self", "cls")
+
+        def xlate(bound):
+            if not _is_sym(bound):
+                return bound
+            key = bound[1]
+            if key in argmap:
+                return ("sym", argmap[key], bound[2])
+            if same_self and key.startswith("self."):
+                return bound
+            return _resolve(bound, cst.env)
+        return Interval(xlate(out.lo), xlate(out.hi))
+
+    # --------------------------------------------------------------- checks
+    def _astype_dtype(self, node: ast.Call) -> str | None:
+        arg = node.args[0] if node.args else None
+        if arg is None:
+            return None
+        chain = dotted(arg)
+        if chain and chain[-1] in _NARROW:
+            return chain[-1]
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+            return arg.value if arg.value in _NARROW else None
+        return None
+
+    def _check_astype(self, node: ast.Call, v: Interval, st: State) -> None:
+        tgt = self._astype_dtype(node)
+        if tgt is None:
+            return
+        if id(node) not in self.argsort_args \
+                and not (self._cur_target
+                         and self._cur_target in self.argsort_names):
+            return          # only sort-key narrowing decides ordering
+        lo, hi = _NARROW[tgt]
+        vlo, vhi = _resolve(v.lo, st.env), _resolve(v.hi, st.env)
+        if vlo is None or vhi is None or vlo < lo or vhi > hi:
+            src = _key_of(node.func.value) or "value"
+            self._flag(node,
+                       f"astype(np.{tgt}) on argsort key '{src}' not "
+                       f"provably within [{lo}, {hi}] (have {Interval(vlo, vhi)}) "
+                       f"— a truncating cast silently reorders the radix "
+                       f"sort; guard or assert the range first")
+
+    def _check_packing(self, node: ast.BinOp, st: State) -> None:
+        sides = [(node.left, node.right), (node.right, node.left)]
+        for shift_side, low_side in sides:
+            if isinstance(shift_side, ast.BinOp) \
+                    and isinstance(shift_side.op, ast.LShift):
+                break
+        else:
+            return
+        c = self.eval(shift_side.right, st)
+        clo, chi = _resolve(c.lo, st.env), _resolve(c.hi, st.env)
+        if clo is None or clo != chi or clo < 8:
+            return          # not a wide-field packing (small bit tricks)
+        shift = clo
+        a = self.eval(shift_side.left, st)
+        b = self.eval(low_side, st)
+        alo, ahi = _resolve(a.lo, st.env), _resolve(a.hi, st.env)
+        blo, bhi = _resolve(b.lo, st.env), _resolve(b.hi, st.env)
+        op = "|" if isinstance(node.op, ast.BitOr) else "+"
+        problems = []
+        if blo is None or blo < 0 or bhi is None or bhi > (1 << shift) - 1:
+            bname = _key_of(low_side) or "low field"
+            problems.append(
+                f"'{bname}' not provably in [0, 2**{shift}) "
+                f"(have {Interval(blo, bhi)})")
+        amax = (1 << (63 - shift)) - 1
+        if alo is None or alo < 0 or ahi is None or ahi > amax:
+            aname = _key_of(shift_side.left) or "shifted field"
+            problems.append(
+                f"'{aname}' << {shift} not provably within int64 "
+                f"(need [0, 2**{63 - shift}), have {Interval(alo, ahi)})")
+        if problems:
+            self._flag(node,
+                       f"unproven packed-key `(A << {shift}) {op} B`: "
+                       + "; ".join(problems)
+                       + " — bands collide or the sort order flips "
+                         "silently; guard or assert before packing")
+
+    # ------------------------------------------------------------ statements
+    _cur_target: str | None = None
+
+    def collect_argsort(self, fn: ast.AST) -> None:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                chain = dotted(node.func)
+                if chain and chain[-1] == "argsort" and node.args:
+                    for sub in ast.walk(node.args[0]):
+                        self.argsort_args.add(id(sub))
+                    if isinstance(node.args[0], ast.Name):
+                        self.argsort_names.add(node.args[0].id)
+
+    def process(self, body: list[ast.stmt], st: State) -> bool:
+        """Walk statements; True when every path terminates (return /
+        raise / continue / break) — the caller then keeps the negated
+        guard."""
+        for stmt in body:
+            if isinstance(stmt, (ast.Return,)):
+                if stmt.value is not None:
+                    self.returns.append(self.eval(stmt.value, st))
+                else:
+                    self.returns.append(TOP)
+                return True
+            if isinstance(stmt, (ast.Raise, ast.Continue, ast.Break)):
+                return True
+            if isinstance(stmt, ast.Assert):
+                self.eval(stmt.test, st)
+                refine(st, stmt.test, True, self)
+            elif isinstance(stmt, ast.Assign):
+                self._assign(stmt, st)
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None \
+                    and isinstance(stmt.target, ast.Name):
+                st.env[stmt.target.id] = self.eval(stmt.value, st)
+            elif isinstance(stmt, ast.AugAssign):
+                self.eval(stmt.value, st)
+                key = _key_of(stmt.target)
+                if key:
+                    st.env.pop(key, None)
+            elif isinstance(stmt, ast.If):
+                if self._if(stmt, st):
+                    return True
+            elif isinstance(stmt, (ast.For, ast.While)):
+                self._loop(stmt, st)
+            elif isinstance(stmt, ast.With):
+                for it in stmt.items:
+                    self.eval(it.context_expr, st)
+                if self.process(stmt.body, st):
+                    return True
+            elif isinstance(stmt, ast.Try):
+                if self.process(stmt.body, st.copy()):
+                    pass
+                for h in stmt.handlers:
+                    self.process(h.body, st.copy())
+                self.process(stmt.finalbody, st)
+                # after try: conservative — drop nothing (checks already ran)
+            elif isinstance(stmt, ast.Expr):
+                self.eval(stmt.value, st)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                continue        # nested defs analyzed as their own functions
+        return False
+
+    def _assign(self, stmt: ast.Assign, st: State) -> None:
+        val = self.eval(stmt.value, st)
+        for tgt in stmt.targets:
+            if isinstance(tgt, ast.Name):
+                self._cur_target = tgt.id
+                st.env[tgt.id] = self.eval(stmt.value, st) \
+                    if tgt is stmt.targets[0] else val
+                self._cur_target = None
+                self._track(tgt.id, stmt.value, st)
+            elif isinstance(tgt, ast.Attribute):
+                key = _key_of(tgt)
+                if key:
+                    st.env[key] = val
+            elif isinstance(tgt, ast.Tuple) and isinstance(stmt.value,
+                                                           ast.Tuple) \
+                    and len(tgt.elts) == len(stmt.value.elts):
+                for t, v in zip(tgt.elts, stmt.value.elts):
+                    if isinstance(t, ast.Name):
+                        st.env[t.id] = self.eval(v, st)
+                        self._track(t.id, v, st)
+            elif isinstance(tgt, ast.Tuple):
+                for t in tgt.elts:
+                    if isinstance(t, ast.Name):
+                        st.env[t.id] = TOP
+                        st.preds.pop(t.id, None)
+
+    def _track(self, name: str, value: ast.AST, st: State) -> None:
+        """len-aliases and predicate bindings for later ``if name:``."""
+        if isinstance(value, ast.Call) and dotted(value.func) == ("len",) \
+                and len(value.args) == 1:
+            src = _key_of(value.args[0])
+            if src:
+                st.lens[src] = name
+        inner = value
+        if isinstance(inner, ast.Call) and dotted(inner.func) == ("bool",) \
+                and len(inner.args) == 1:
+            inner = inner.args[0]
+        if isinstance(inner, (ast.Compare, ast.BoolOp)):
+            st.preds[name] = (inner, {k: v.copy()
+                                      for k, v in st.env.items()})
+        elif isinstance(inner, ast.Constant) and not inner.value:
+            st.preds[name] = _NEVER
+        else:
+            st.preds.pop(name, None)
+
+    @staticmethod
+    def _merge_preds(a: dict, b: dict) -> dict:
+        out = {}
+        for k in set(a) & set(b):
+            pa, pb = a[k], b[k]
+            if pa == pb:
+                out[k] = pa
+            elif pb == _NEVER:
+                out[k] = pa       # other path can't make the var truthy
+            elif pa == _NEVER:
+                out[k] = pb
+        return out
+
+    @staticmethod
+    def _merge_lens(a: dict, b: dict) -> dict:
+        return {k: v for k, v in a.items() if b.get(k) == v}
+
+    def _join(self, st: State, a: State, b: State) -> None:
+        joined = {}
+        for k in set(a.env) | set(b.env):
+            joined[k] = _hull(a.env.get(k, TOP), b.env.get(k, TOP))
+        st.env = joined
+        st.preds = self._merge_preds(a.preds, b.preds)
+        st.lens = self._merge_lens(a.lens, b.lens)
+
+    def _if(self, stmt: ast.If, st: State) -> bool:
+        body_st = st.copy()
+        refine(body_st, stmt.test, True, self)
+        term_body = self.process(stmt.body, body_st)
+        if stmt.orelse:
+            else_st = st.copy()
+            refine(else_st, stmt.test, False, self)
+            term_else = self.process(stmt.orelse, else_st)
+            if term_body and term_else:
+                return True
+            if term_body:
+                st.env = else_st.env
+                st.lens, st.preds = else_st.lens, else_st.preds
+                return False
+            if term_else:
+                st.env = body_st.env
+                st.lens, st.preds = body_st.lens, body_st.preds
+                return False
+            self._join(st, body_st, else_st)
+            return False
+        if term_body:
+            refine(st, stmt.test, False, self)
+            return False
+        self._join(st, body_st, st.copy())
+        return False
+
+    def _loop(self, stmt, st: State) -> None:
+        body_st = st.copy()
+        if isinstance(stmt, ast.For):
+            self._bind_loop_target(stmt, body_st)
+        else:
+            refine(body_st, stmt.test, True, self)
+        self.process(stmt.body, body_st)
+        self.process(stmt.orelse, st.copy())
+        for n in ast.walk(stmt):
+            if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                tgts = n.targets if isinstance(n, ast.Assign) else [n.target]
+                for t in tgts:
+                    for nn in ast.walk(t):
+                        if isinstance(nn, ast.Name):
+                            st.env.pop(nn.id, None)
+                            st.preds.pop(nn.id, None)
+
+    def _bind_loop_target(self, stmt: ast.For, st: State) -> None:
+        it, tgt = stmt.iter, stmt.target
+        names = [n.id for n in ast.walk(tgt) if isinstance(n, ast.Name)]
+        for n in names:
+            st.env[n] = TOP
+            st.preds.pop(n, None)
+        if not isinstance(it, ast.Call):
+            return
+        chain = dotted(it.func)
+        if chain == ("range",) and it.args:
+            iv = (Interval(0, self._upper_minus_one(it.args[0], st))
+                  if len(it.args) == 1 else
+                  Interval(_resolve(self.eval(it.args[0], st).lo, st.env),
+                           self._upper_minus_one(it.args[1], st)))
+            if isinstance(tgt, ast.Name):
+                st.env[tgt.id] = iv
+        elif chain == ("enumerate",) and it.args \
+                and isinstance(tgt, ast.Tuple) and tgt.elts \
+                and isinstance(tgt.elts[0], ast.Name):
+            src = _key_of(it.args[0])
+            hi = None
+            if src and src in st.lens and st.lens[src] in st.env:
+                nhi = _resolve(st.env[st.lens[src]].hi, st.env)
+                hi = nhi - 1 if nhi is not None else None
+            st.env[tgt.elts[0].id] = Interval(0, hi)
+
+    def _upper_minus_one(self, node: ast.AST, st: State) -> int | None:
+        hi = _resolve(self.eval(node, st).hi, st.env)
+        return hi - 1 if hi is not None else None
+
+
+def refine(st: State, cond: ast.AST, truth: bool, an: _Analyzer,
+           eval_env: dict | None = None) -> None:
+    """Apply what a condition (known ``truth``) implies to ``st.env``."""
+    if isinstance(cond, ast.UnaryOp) and isinstance(cond.op, ast.Not):
+        refine(st, cond.operand, not truth, an, eval_env)
+        return
+    if isinstance(cond, ast.Call) and dotted(cond.func) == ("bool",) \
+            and len(cond.args) == 1:
+        refine(st, cond.args[0], truth, an, eval_env)
+        return
+    if isinstance(cond, ast.Name) and truth and cond.id in st.preds:
+        entry = st.preds[cond.id]
+        if entry == _NEVER:
+            return                 # branch statically unreachable here
+        pred, captured = entry
+        refine(st, pred, True, an, captured)
+        return
+    if isinstance(cond, ast.BoolOp):
+        if isinstance(cond.op, ast.And) and truth:
+            for v in cond.values:
+                refine(st, v, True, an, eval_env)
+        elif isinstance(cond.op, ast.Or) and not truth:
+            for v in cond.values:
+                refine(st, v, False, an, eval_env)
+        elif isinstance(cond.op, ast.And) and not truth:
+            # ¬(len(x) and C) refines ¬C for ELEMENTWISE facts: an empty
+            # array satisfies any elementwise bound vacuously.  Only when
+            # exactly one conjunct is not a len()-truthiness test.
+            rest = [v for v in cond.values
+                    if not (isinstance(v, ast.Call)
+                            and dotted(v.func) == ("len",))]
+            if len(rest) == 1:
+                refine(st, rest[0], False, an, eval_env)
+        return
+    if not isinstance(cond, ast.Compare):
+        return
+    sides = [cond.left, *cond.comparators]
+    ops = list(cond.ops)
+    for i, op in enumerate(ops):
+        left, right = sides[i], sides[i + 1]
+        _refine_pair(st, left, op, right, truth, an, eval_env)
+
+
+_FLIP = {ast.Lt: ast.Gt, ast.Gt: ast.Lt, ast.LtE: ast.GtE, ast.GtE: ast.LtE,
+         ast.Eq: ast.Eq, ast.NotEq: ast.NotEq}
+_NEG = {ast.Lt: ast.GtE, ast.LtE: ast.Gt, ast.Gt: ast.LtE, ast.GtE: ast.Lt,
+        ast.Eq: ast.NotEq, ast.NotEq: ast.Eq}
+
+
+def _refine_pair(st: State, left: ast.AST, op: ast.cmpop, right: ast.AST,
+                 truth: bool, an: _Analyzer, eval_env: dict | None) -> None:
+    opt = type(op)
+    if opt not in _FLIP:
+        return
+    if not truth:
+        opt = _NEG[opt]
+    ev = State()
+    ev.env = eval_env if eval_env is not None else st.env
+    for key_side, bound_side, o in ((left, right, opt),
+                                    (right, left, _FLIP[opt])):
+        key = _key_of(key_side)
+        if key is None:
+            continue
+        b = an.eval(bound_side, ev)
+        blo, bhi = _resolve(b.lo, ev.env), _resolve(b.hi, ev.env)
+        cur = st.env.get(key, TOP).copy()
+        if bhi is None:
+            # bound is a named quantity with no concrete range yet
+            # (``assert sets.max() < self.cache_sets``): keep it as a
+            # SYMBOLIC upper bound, resolved wherever the name later
+            # gains one (e.g. under ``if self.cache_sets <= 2**16``)
+            bkey = _key_of(bound_side)
+            if bkey is not None and not isinstance(cur.hi, int):
+                if o is ast.Lt:
+                    cur.hi = ("sym", bkey, -1)
+                    st.env[key] = cur
+                elif o is ast.LtE:
+                    cur.hi = ("sym", bkey, 0)
+                    st.env[key] = cur
+        if o is ast.Lt and bhi is not None:
+            cur.hi = bhi - 1 if not isinstance(cur.hi, int) \
+                else min(cur.hi, bhi - 1)
+        elif o is ast.LtE and bhi is not None:
+            cur.hi = bhi if not isinstance(cur.hi, int) \
+                else min(cur.hi, bhi)
+        elif o is ast.Gt and blo is not None:
+            cur.lo = blo + 1 if not isinstance(cur.lo, int) \
+                else max(cur.lo, blo + 1)
+        elif o is ast.GtE and blo is not None:
+            cur.lo = blo if not isinstance(cur.lo, int) \
+                else max(cur.lo, blo)
+        elif o is ast.Eq and blo is not None and blo == bhi:
+            cur = const(blo)
+        else:
+            continue
+        st.env[key] = cur
+
+
+def _int_const_expr(node: ast.AST, known: dict[str, int]) -> int | None:
+    """Tiny const-folder for module/class-level integer definitions
+    (``_SHIFT = np.int64(45)``, ``_LIM = np.int64(1) << _SHIFT``)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.Name):
+        return known.get(node.id)
+    if isinstance(node, ast.Call) and len(node.args) == 1:
+        chain = dotted(node.func)
+        if chain and chain[-1] in ("int64", "uint64", "int32", "int16",
+                                   "int8", "uint32", "uint16", "uint8",
+                                   "int"):
+            return _int_const_expr(node.args[0], known)
+    if isinstance(node, ast.BinOp):
+        l = _int_const_expr(node.left, known)
+        r = _int_const_expr(node.right, known)
+        if l is None or r is None:
+            return None
+        if isinstance(node.op, ast.LShift) and 0 <= r <= 62:
+            return l << r
+        if isinstance(node.op, ast.Add):
+            return l + r
+        if isinstance(node.op, ast.Sub):
+            return l - r
+        if isinstance(node.op, ast.Mult):
+            return l * r
+        if isinstance(node.op, ast.Pow) and 0 <= r <= 64 and abs(l) <= 4096:
+            return l ** r
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = _int_const_expr(node.operand, known)
+        return -v if v is not None else None
+    return None
+
+
+@register_rule
+class PackedKeyBitwidth(Rule):
+    """Unproven packed-key arithmetic / truncating sort-key cast."""
+    id = "B601"
+    title = "packed-key bit-width not statically proven"
+    scope = ("src/repro/state/", "src/repro/streaming/")
+
+    def __init__(self) -> None:
+        self._found: list[Finding] = []
+        self._by_path: dict[str, list[Finding]] = {}
+        self._consts: dict[str, dict[str, int]] = {}
+        self._cls_consts: dict[tuple[str, str | None], dict[str, int]] = {}
+        self._unit_of: dict[str, FileUnit] = {}
+        self._cg = None
+
+    def _targets_of(self, relpath: str):
+        return self._site_targets.get(relpath, {})
+
+    def prepare(self, units: list[FileUnit]) -> None:
+        self._found = []
+        self._by_path = {}
+        self._cg = get_callgraph(units)
+        self._unit_of = {u.relpath: u for u in units}
+        # integer constant tables (module level + class attributes)
+        for u in units:
+            known: dict[str, int] = {}
+            for stmt in u.tree.body:
+                if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                        and isinstance(stmt.targets[0], ast.Name):
+                    v = _int_const_expr(stmt.value, known)
+                    if v is not None:
+                        known[stmt.targets[0].id] = v
+                if isinstance(stmt, ast.ClassDef):
+                    cknown: dict[str, int] = {}
+                    for cs in stmt.body:
+                        if isinstance(cs, ast.Assign) \
+                                and len(cs.targets) == 1 \
+                                and isinstance(cs.targets[0], ast.Name):
+                            v = _int_const_expr(cs.value,
+                                                dict(known, **cknown))
+                            if v is not None:
+                                cknown[cs.targets[0].id] = v
+                    self._cls_consts[(u.relpath, stmt.name)] = {
+                        "self." + k: v for k, v in cknown.items()}
+            self._consts[u.relpath] = known
+        # per-file call-node -> resolved FuncNode targets (for inlining)
+        self._site_targets: dict[str, dict[int, list]] = {}
+        for site in self._cg.sites:
+            rel = self._cg.nodes[site.caller].relpath
+            self._site_targets.setdefault(rel, {})[id(site.call)] = [
+                self._cg.nodes[t] for t in site.targets]
+        # analyze every function in every APPLICABLE unit
+        for fid, fn in sorted(self._cg.nodes.items()):
+            if fn.node is None or not self.applies(fn.relpath):
+                continue
+            unit = self._unit_of[fn.relpath]
+            an = _Analyzer(self, unit, self._consts.get(fn.relpath, {}),
+                           self._cls_consts.get((fn.relpath, fn.cls), {}),
+                           self._targets_of(fn.relpath))
+            an.collect_argsort(fn.node)
+            an.process(fn.node.body, State())
+        for f in self._found:
+            self._by_path.setdefault(f.path, []).append(f)
+
+    def visit(self, unit: FileUnit) -> list[Finding]:
+        return list(self._by_path.get(unit.relpath, ()))

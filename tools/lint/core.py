@@ -77,6 +77,9 @@ class FileUnit:
     tree: ast.AST
     lines: list[str]         # source lines (1-based access via line_at)
 
+    def in_repro(self) -> bool:
+        return self.relpath.startswith("src/repro/")
+
     def line_at(self, lineno: int) -> str:
         if 1 <= lineno <= len(self.lines):
             return self.lines[lineno - 1].strip()
@@ -131,7 +134,10 @@ def register_rule(cls: type[Rule]) -> type[Rule]:
 
 def all_rules(only: set[str] | None = None) -> list[Rule]:
     """Fresh instances of the registered panel, sorted by id."""
-    import tools.lint.rules  # noqa: F401  (registers the panel)
+    import tools.lint.rules    # noqa: F401  (registers the per-file panel)
+    import tools.lint.taint    # noqa: F401  (T501/T502)
+    import tools.lint.bitwidth  # noqa: F401  (B601)
+    import tools.lint.effects  # noqa: F401  (A701)
     ids = sorted(_RULES)
     if only is not None:
         unknown = only - set(ids)
@@ -184,6 +190,37 @@ def identifiers(node: ast.AST) -> list[str]:
 
 
 # ---------------------------------------------------------------------------
+# Program: the whole-unit set, with shared interprocedural state
+# ---------------------------------------------------------------------------
+
+class Program(list):
+    """The list of :class:`FileUnit`\\ s for one lint run, carrying lazily
+    built whole-program state shared by every interprocedural pass.  The
+    call graph is built at most once per run no matter how many passes
+    ask for it — the per-pass cost is the analysis, not the parse or the
+    graph."""
+
+    def __init__(self, units: list[FileUnit]) -> None:
+        super().__init__(units)
+        self._callgraph = None
+
+    def callgraph(self):
+        if self._callgraph is None:
+            from tools.lint.callgraph import build_callgraph
+            self._callgraph = build_callgraph(list(self))
+        return self._callgraph
+
+
+def get_callgraph(units: list[FileUnit]):
+    """The shared call graph when ``units`` is a :class:`Program` (the
+    normal case inside ``lint_units``); a fresh one otherwise."""
+    if isinstance(units, Program):
+        return units.callgraph()
+    from tools.lint.callgraph import build_callgraph
+    return build_callgraph(list(units))
+
+
+# ---------------------------------------------------------------------------
 # Running
 # ---------------------------------------------------------------------------
 
@@ -223,12 +260,21 @@ def _apply_suppressions(unit: FileUnit,
 
 
 def lint_units(units: list[FileUnit],
-               rules: list[Rule] | None = None) -> LintResult:
+               rules: list[Rule] | None = None,
+               emit_only: set[str] | None = None) -> LintResult:
+    """Run the panel.  ``emit_only`` restricts *reported* findings to the
+    given relpaths while every unit still participates in whole-program
+    pre-passes — the ``--changed-only`` contract: interprocedural facts
+    come from the full program, the diff decides what is reported."""
     rules = rules if rules is not None else all_rules()
+    if not isinstance(units, Program):
+        units = Program(units)
     for rule in rules:
         rule.prepare(units)
     res = LintResult(files=len(units))
     for unit in units:
+        if emit_only is not None and unit.relpath not in emit_only:
+            continue
         found: list[Finding] = []
         for rule in rules:
             if rule.applies(unit.relpath):
@@ -244,6 +290,24 @@ def parse_source(src: str, relpath: str) -> FileUnit:
     tree = ast.parse(src, filename=relpath)
     return FileUnit(relpath=relpath.replace(os.sep, "/"), tree=tree,
                     lines=src.splitlines())
+
+
+# (abspath) -> (mtime_ns, size, FileUnit): every rule AND every
+# interprocedural pass in a process shares one parse per file — repeated
+# lint entry points (CLI + self-check, test harnesses) hit the cache.
+_PARSE_CACHE: dict[str, tuple[int, int, FileUnit]] = {}
+
+
+def parse_file(relpath: str) -> FileUnit:
+    absp = os.path.join(REPO, relpath)
+    st = os.stat(absp)
+    hit = _PARSE_CACHE.get(absp)
+    if hit is not None and hit[0] == st.st_mtime_ns and hit[1] == st.st_size:
+        return hit[2]
+    with open(absp, encoding="utf-8") as f:
+        unit = parse_source(f.read(), relpath)
+    _PARSE_CACHE[absp] = (st.st_mtime_ns, st.st_size, unit)
+    return unit
 
 
 def lint_source(src: str, relpath: str,
@@ -273,12 +337,10 @@ def collect_files(paths: list[str]) -> list[str]:
 
 
 def lint_paths(paths: list[str],
-               rules: list[Rule] | None = None) -> LintResult:
-    units = []
-    for rel in collect_files(paths):
-        with open(os.path.join(REPO, rel), encoding="utf-8") as f:
-            units.append(parse_source(f.read(), rel))
-    return lint_units(units, rules)
+               rules: list[Rule] | None = None,
+               emit_only: set[str] | None = None) -> LintResult:
+    units = Program([parse_file(rel) for rel in collect_files(paths)])
+    return lint_units(units, rules, emit_only=emit_only)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,392 @@
+"""A701 — escape/aliasing analysis for live SoA arrays.
+
+The PR 4 ``items()`` bug class: a store method returns (or logs into a
+history row) a *view* of a live internal array — a run key column, the
+admission counters — and the caller mutates or keeps it across a
+``put_batch``, silently corrupting state or recording values that change
+after the fact.  We fixed ``items()`` once by hand; A701 checks the
+whole class of them.
+
+The pass computes, for every function in sim scope, a **view-source
+summary**: the subset of ``{"self"} ∪ params`` whose live storage the
+return value may alias.  Summaries propagate bottom-up over the shared
+call graph to a fixpoint, so a public method that returns
+``self._collapse(sources)`` where ``_collapse`` passes an element of its
+argument straight through is caught even though the public method never
+touches ``self.<array>`` syntactically.
+
+What counts as *live internal storage*: ``self.X`` where X looks like an
+array container — assigned anywhere in the class from a ``np.*`` /
+``numpy.*`` call chain, has ``.append()`` called on it, or is assigned a
+list literal/comprehension.  Plain scalars, dicts and config attributes
+are not storage, so returning ``self.seed`` is fine.
+
+What *launders* a value (stops alias propagation): ``.copy()``,
+``np.array(...)``, ``np.asarray`` is NOT blessed (it is a no-copy cast
+on purpose), ``copy.deepcopy``, ``np.concatenate`` and friends (they
+allocate), arithmetic that allocates (``a + 1``... but ``a + b`` on
+tuples concatenates views, so BinOp unions), and fancy (array-valued)
+indexing.  Basic slices and constant indices preserve aliasing.
+
+Findings:
+* a PUBLIC (no leading underscore, non-dunder) function/method whose
+  return value may alias ``self`` storage — reported at the return;
+* any ``<...>.history.append(arg)`` whose argument may alias ``self``
+  storage — history rows must be frozen at append time.
+
+Private helpers returning views are fine (that is how the SoA code
+avoids copies internally); the *public surface* and the audit history
+are where aliasing escapes control.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import FileUnit, Finding, Rule, dotted, get_callgraph, \
+    register_rule
+from tools.lint.rules import SIM_SCOPE
+
+_LAUNDER_CALLS = {
+    ("copy",), ("deepcopy",),
+}
+_LAUNDER_NP = {"array", "concatenate", "zeros", "ones", "empty", "full",
+               "arange", "unique", "sort", "cumsum", "repeat", "tile",
+               "where", "searchsorted", "argsort", "bincount", "diff",
+               "add", "maximum", "minimum", "stack", "hstack", "vstack",
+               "split", "copy", "zeros_like", "ones_like", "empty_like",
+               "full_like", "fromiter", "asfortranarray", "ascontiguousarray"}
+_LAUNDER_METHODS = {"copy", "tolist", "sum", "mean", "astype", "item",
+                    "nonzero", "cumsum", "argsort", "take"}
+
+
+def _fixture(relpath: str) -> bool:
+    return not relpath.startswith("src/repro/")
+
+
+def _sim(relpath: str) -> bool:
+    return _fixture(relpath) or relpath.startswith(SIM_SCOPE)
+
+
+def _is_np_chain(node: ast.AST) -> bool:
+    chain = dotted(node)
+    return bool(chain) and chain[0] in ("np", "numpy", "jnp")
+
+
+def array_attrs(cls: ast.ClassDef) -> set[str]:
+    """Attribute names in this class that look like live array storage."""
+    out: set[str] = set()
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Assign):
+            arrayish = False
+            v = node.value
+            if isinstance(v, ast.Call) and _is_np_chain(v.func):
+                arrayish = True
+            elif isinstance(v, (ast.List, ast.ListComp)):
+                arrayish = True
+            if arrayish:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Attribute) \
+                            and isinstance(tgt.value, ast.Name) \
+                            and tgt.value.id == "self":
+                        out.add(tgt.attr)
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr == "append" \
+                    and isinstance(f.value, ast.Attribute) \
+                    and isinstance(f.value.value, ast.Name) \
+                    and f.value.value.id == "self":
+                out.add(f.value.attr)
+    return out
+
+
+class _FnInfo:
+    __slots__ = ("fid", "unit", "fn", "params", "is_method", "arrays",
+                 "summary", "aliases", "callsites")
+
+    def __init__(self, fid, unit, fn, params, is_method, arrays):
+        self.fid = fid
+        self.unit = unit
+        self.fn = fn
+        self.params = params            # positional param names (sans self)
+        self.is_method = is_method
+        self.arrays = arrays            # this class's array attr names
+        self.summary: frozenset[str] = frozenset()
+        self.aliases: dict[str, frozenset[str]] = {}
+        self.callsites: dict[int, list[str]] = {}   # id(Call) -> target fids
+
+
+@register_rule
+class ViewEscape(Rule):
+    """Public return / history append aliasing live internal arrays."""
+    id = "A701"
+    title = "view of live internal array escapes without a copy"
+    scope = SIM_SCOPE
+
+    def __init__(self) -> None:
+        self._by_path: dict[str, list[Finding]] = {}
+
+    # ------------------------------------------------------------ sources
+    def _sources(self, node: ast.AST, info: _FnInfo,
+                 env: dict[str, frozenset[str]]) -> frozenset[str]:
+        """Which of {"self"} ∪ params the value of ``node`` may alias."""
+        if isinstance(node, ast.Name):
+            if node.id in ("self", "cls") and info.is_method:
+                return frozenset(("self",))
+            if node.id in env:
+                return env[node.id]
+            if node.id in info.params:
+                return frozenset((node.id,))
+            return frozenset()
+        if isinstance(node, ast.Attribute):
+            chain = dotted(node)
+            if chain and chain[0] == "self" and len(chain) == 2 \
+                    and chain[1] in info.arrays:
+                return frozenset(("self",))
+            return frozenset()
+        if isinstance(node, ast.Subscript):
+            base = self._sources(node.value, info, env)
+            if not base:
+                return frozenset()
+            sl = node.slice
+            if isinstance(sl, ast.Slice) or (
+                    isinstance(sl, ast.Constant)
+                    and isinstance(sl.value, int)):
+                return base                     # view-preserving index
+            if isinstance(sl, ast.UnaryOp) \
+                    and isinstance(sl.operand, ast.Constant):
+                return base
+            if isinstance(sl, ast.Tuple) and all(
+                    isinstance(e, (ast.Slice, ast.Constant))
+                    for e in sl.elts):
+                return base
+            return frozenset()                  # fancy indexing copies
+        if isinstance(node, (ast.Tuple, ast.List)):
+            out: frozenset[str] = frozenset()
+            for e in node.elts:
+                out |= self._sources(e, info, env)
+            return out
+        if isinstance(node, ast.Dict):
+            out = frozenset()
+            for v in node.values:
+                out |= self._sources(v, info, env)
+            return out
+        if isinstance(node, ast.Starred):
+            return self._sources(node.value, info, env)
+        if isinstance(node, ast.IfExp):
+            return self._sources(node.body, info, env) \
+                | self._sources(node.orelse, info, env)
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+            # tuple/list + concatenates views; array + allocates.  Union
+            # is the safe over-approximation either way.
+            return self._sources(node.left, info, env) \
+                | self._sources(node.right, info, env)
+        if isinstance(node, (ast.ListComp, ast.GeneratorExp, ast.SetComp)):
+            # a comprehension allocates a NEW container whose elements
+            # alias the iterated values: [s for s in runs] keeps every
+            # view; [s.copy() for s in runs] launders elementwise
+            elt_env = dict(env)
+            for gen in node.generators:
+                gen_src = self._sources(gen.iter, info, elt_env)
+                if isinstance(gen.target, ast.Name):
+                    elt_env[gen.target.id] = gen_src
+                else:
+                    # tuple-destructuring targets (for s, d in edges)
+                    # extract element FIELDS, overwhelmingly scalars in
+                    # this codebase — treated as laundering; whole-row
+                    # aliasing uses a bare name target
+                    for n in ast.walk(gen.target):
+                        if isinstance(n, ast.Name):
+                            elt_env[n.id] = frozenset()
+            return self._sources(node.elt, info, elt_env)
+        if isinstance(node, ast.Call):
+            return self._call_sources(node, info, env)
+        if isinstance(node, ast.NamedExpr):
+            return self._sources(node.value, info, env)
+        return frozenset()
+
+    def _call_sources(self, node: ast.Call, info: _FnInfo,
+                      env: dict[str, frozenset[str]]) -> frozenset[str]:
+        chain = dotted(node.func)
+        if chain:
+            if chain[0] in ("np", "numpy", "jnp"):
+                if chain[-1] == "asarray":
+                    # asarray is a no-copy cast — aliasing passes through
+                    return (self._sources(node.args[0], info, env)
+                            if node.args else frozenset())
+                if chain[-1] in _LAUNDER_NP:
+                    return frozenset()
+            if chain[-1] in ("copy", "deepcopy") and len(chain) <= 2:
+                if len(chain) == 2 and chain[0] not in ("copy",):
+                    return frozenset()      # x.copy() launders
+                return frozenset()          # copy.copy / copy.deepcopy
+            if len(chain) >= 2 and chain[-1] in _LAUNDER_METHODS:
+                return frozenset()
+            if chain in (("tuple",), ("list",)) and len(node.args) == 1:
+                # tuple(xs) re-wraps the container but keeps element
+                # aliasing; tuple(a.copy() for a in xs) launders through
+                # the comprehension rule above.
+                return self._sources(node.args[0], info, env)
+            if chain[-1] == "append":
+                return frozenset()
+        # in-program callee: apply its summary to this site's arguments
+        targets = info.callsites.get(id(node), ())
+        out: frozenset[str] = frozenset()
+        for tfid in targets:
+            tinfo = self._infos.get(tfid)
+            if tinfo is None:
+                continue
+            summ = tinfo.summary
+            if "self" in summ:
+                recv = node.func
+                if isinstance(recv, ast.Attribute):
+                    out |= self._sources(recv.value, info, env)
+            for i, p in enumerate(tinfo.params):
+                if p in summ and i < len(node.args):
+                    out |= self._sources(node.args[i], info, env)
+        return out
+
+    # ------------------------------------------------------------ summary
+    def _local_env(self, info: _FnInfo) -> dict[str, frozenset[str]]:
+        """Forward pass over simple assignments (linear, last-write-wins
+        in statement order — adequate for the SoA helper style)."""
+        env: dict[str, frozenset[str]] = {}
+        for node in ast.walk(info.fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not info.fn:
+                pass            # nested defs get their own summaries
+        for stmt in self._linear_stmts(info.fn.body):
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                env[stmt.targets[0].id] = self._sources(
+                    stmt.value, info, env)
+            elif isinstance(stmt, ast.Assign) \
+                    and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Tuple) \
+                    and isinstance(stmt.value, ast.Tuple) \
+                    and len(stmt.targets[0].elts) == len(stmt.value.elts):
+                for t, v in zip(stmt.targets[0].elts, stmt.value.elts):
+                    if isinstance(t, ast.Name):
+                        env[t.id] = self._sources(v, info, env)
+            elif isinstance(stmt, ast.Assign):
+                src = self._sources(stmt.value, info, env)
+                for t in stmt.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name) and isinstance(
+                                t, (ast.Name, ast.Tuple)):
+                            env[n.id] = src
+        return env
+
+    def _linear_stmts(self, body):
+        for stmt in body:
+            yield stmt
+            for attr in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, attr, None)
+                if sub and not isinstance(
+                        stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                    yield from self._linear_stmts(sub)
+            for h in getattr(stmt, "handlers", ()):
+                yield from self._linear_stmts(h.body)
+
+    def _summarize(self, info: _FnInfo) -> frozenset[str]:
+        env = self._local_env(info)
+        info.aliases = env
+        out: frozenset[str] = frozenset()
+        for stmt in self._linear_stmts(info.fn.body):
+            if isinstance(stmt, ast.Return) and stmt.value is not None:
+                out |= self._sources(stmt.value, info, env)
+        return out
+
+    # ------------------------------------------------------------ prepare
+    def prepare(self, units: list[FileUnit]) -> None:
+        self._by_path = {}
+        cg = get_callgraph(units)
+        self._infos: dict[str, _FnInfo] = {}
+        arrays_by_cls: dict[tuple[str, str], set[str]] = {}
+        for u in units:
+            for node in ast.walk(u.tree):
+                if isinstance(node, ast.ClassDef):
+                    arrays_by_cls[(u.relpath, node.name)] = array_attrs(node)
+        for fid, fn in cg.nodes.items():
+            if fn.node is None or not isinstance(
+                    fn.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            args = list(fn.node.args.args)
+            is_method = fn.cls is not None and bool(args) \
+                and args[0].arg in ("self", "cls")
+            params = [a.arg for a in (args[1:] if is_method else args)]
+            arrays = arrays_by_cls.get((fn.relpath, fn.cls), set()) \
+                if fn.cls else set()
+            self._infos[fid] = _FnInfo(fid, cg.unit_of[fid], fn.node,
+                                       params, is_method, arrays)
+        for site in cg.sites:
+            info = self._infos.get(site.caller)
+            if info is not None:
+                info.callsites[id(site.call)] = [
+                    t for t in site.targets if t in self._infos]
+        # bottom-up fixpoint (summaries only grow; bounded lattice)
+        for _ in range(8):
+            changed = False
+            for fid in sorted(self._infos):
+                info = self._infos[fid]
+                new = self._summarize(info)
+                if new != info.summary:
+                    info.summary = new
+                    changed = True
+            if not changed:
+                break
+        # findings
+        for fid in sorted(self._infos):
+            info = self._infos[fid]
+            if not _sim(info.unit.relpath):
+                continue
+            self._check_public_returns(info)
+            self._check_history_appends(info)
+
+    def _check_public_returns(self, info: _FnInfo) -> None:
+        name = info.fn.name
+        if name.startswith("_"):
+            return
+        if "self" not in info.summary or not info.is_method:
+            return
+        env = info.aliases
+        for stmt in self._linear_stmts(info.fn.body):
+            if isinstance(stmt, ast.Return) \
+                    and isinstance(stmt.value, ast.Name) \
+                    and stmt.value.id in ("self", "cls"):
+                continue    # fluent/identity idiom: the caller already
+                            # holds the receiver, nothing new escapes
+            if isinstance(stmt, ast.Return) and stmt.value is not None \
+                    and "self" in self._sources(stmt.value, info, env):
+                self._emit(info, stmt,
+                           f"public method {name}() returns a view of "
+                           f"live internal array storage — callers can "
+                           f"mutate state in place or observe later "
+                           f"updates; return copies (x.copy() / "
+                           f"np.array(x)) at the public surface")
+
+    def _check_history_appends(self, info: _FnInfo) -> None:
+        env = info.aliases
+        for node in ast.walk(info.fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if not (isinstance(f, ast.Attribute) and f.attr == "append"):
+                continue
+            owner = dotted(f.value)
+            if not owner or owner[-1] != "history":
+                continue
+            for arg in node.args:
+                if "self" in self._sources(arg, info, env):
+                    self._emit(info, node,
+                               "history row aliases live internal array "
+                               "storage — the recorded value changes "
+                               "after later updates; append a copy")
+                    break
+
+    def _emit(self, info: _FnInfo, node: ast.AST, msg: str) -> None:
+        f = info.unit.finding(self, node, msg)
+        self._by_path.setdefault(info.unit.relpath, []).append(f)
+
+    def visit(self, unit: FileUnit) -> list[Finding]:
+        return list(self._by_path.get(unit.relpath, ()))

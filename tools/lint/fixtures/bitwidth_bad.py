@@ -1,0 +1,23 @@
+# as: src/repro/state/bw_bad.py
+"""Known-bad bit-width fixture: packed-key arithmetic with NO static
+proof.  ``pack_unguarded`` bounds neither field; ``pack_overflow``
+proves the low field (mod) but leaves the shifted rank count unbounded,
+so the int64 can overflow; ``radix_cast`` narrows an unbounded sort key
+to uint16."""
+import numpy as np
+
+_SHIFT = np.int64(45)
+
+
+def pack_unguarded(ranks, keys):
+    return (ranks << _SHIFT) | keys                  # expect: B601
+
+
+def pack_overflow(n, keys):
+    keys = keys % np.int64(1 << 45)
+    ranks = np.arange(n)
+    return (ranks << _SHIFT) + keys                  # expect: B601
+
+
+def radix_cast(part):
+    return np.argsort(part.astype(np.uint16), kind="stable")  # expect: B601

@@ -1,0 +1,24 @@
+# as: src/repro/state/bw_good.py
+"""Known-good bit-width fixture: the same packing shapes as bw_bad, but
+with the guards B601's abstract interpretation accepts as proofs —
+an assert bounding the rank count, an early-return range check on the
+(sorted) key array, and a modulus bounding the radix-cast sort key."""
+import numpy as np
+
+_SHIFT = np.int64(45)
+_LIM = np.int64(1) << _SHIFT
+
+
+def pack_guarded(srcs, keys):
+    n = len(srcs)
+    assert n < (1 << 18)
+    if len(keys) and (keys[0] < 0 or keys[-1] >= _LIM):
+        raise ValueError("key outside the 45-bit band")
+    ranks = np.arange(n)
+    return (ranks << _SHIFT) + keys
+
+
+def radix_cast(part, p):
+    assert p <= (1 << 16)
+    part = part % p
+    return np.argsort(part.astype(np.uint16), kind="stable")

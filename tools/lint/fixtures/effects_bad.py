@@ -1,0 +1,26 @@
+# as: src/repro/state/fx_bad.py
+"""Known-bad aliasing fixture: the PR 4 ``items()`` bug class.  Public
+methods hand out views of live internal arrays (directly, through a
+private helper, and as a slice), and a history row freezes a reference
+instead of a copy — every later in-place update rewrites what the
+caller/auditor already holds."""
+import numpy as np
+
+
+class Store:
+    def __init__(self, n):
+        self._keys = np.arange(n)
+        self._vals = np.zeros(n)
+        self.history = []
+
+    def _live_pair(self):
+        return self._keys, self._vals
+
+    def items(self):
+        return self._live_pair()                     # expect: A701
+
+    def tail(self, k):
+        return self._vals[-k:]                       # expect: A701
+
+    def log_state(self, now):
+        self.history.append((now, self._vals))       # expect: A701

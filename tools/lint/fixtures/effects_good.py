@@ -1,0 +1,22 @@
+# as: src/repro/state/fx_good.py
+"""Known-good aliasing fixture: the same surface as fx_bad, but every
+value crossing the public boundary (or frozen into a history row) is
+laundered through ``.copy()`` / ``np.array``, which the escape analysis
+recognizes as allocation."""
+import numpy as np
+
+
+class Store:
+    def __init__(self, n):
+        self._keys = np.arange(n)
+        self._vals = np.zeros(n)
+        self.history = []
+
+    def items(self):
+        return self._keys.copy(), np.array(self._vals)
+
+    def tail(self, k):
+        return self._vals[-k:].copy()
+
+    def log_state(self, now):
+        self.history.append((now, self._vals.copy()))

@@ -1,0 +1,18 @@
+"""Known-bad transitive-sort fixture (no ``# as:`` — the fixture path
+counts as sim scope AND jax-side at once, the cross-file convention).
+``rank_raw`` is D103's per-file catch; the two call sites reaching it
+are what only T502's call-graph sweep can see: tie order at the caller
+silently depends on the callee's sort algorithm."""
+import numpy as np
+
+
+def rank_raw(xs):
+    return np.argsort(xs)                            # expect: D103
+
+
+def _shuffle_rank(xs):
+    return rank_raw(xs)                              # expect: T502
+
+
+def arbitrate(xs):
+    return _shuffle_rank(xs)                         # expect: T502

@@ -1,0 +1,19 @@
+# as: src/repro/streaming/events.py
+"""Known-bad taint fixture: the pretend path is golden-trace-critical,
+and wall-clock nondeterminism reaches it TRANSITIVELY — the helpers the
+per-file rules flag directly (R305 import ban, D102 call ban) leak into
+``_stamp``/``emit`` through call edges only T501's reachability proof
+can see."""
+import time                                          # expect: R305
+
+
+def _now_wall():
+    return time.time()                               # expect: D102
+
+
+def _stamp(batch):
+    return batch, _now_wall()                        # expect: T501
+
+
+def emit(batch):
+    return _stamp(batch)                             # expect: T501

@@ -1,0 +1,18 @@
+# as: src/repro/data/nexmark.py
+"""Known-good taint fixture: randomness in a golden module is fine when
+the generator is explicitly SEEDED and threaded through the call chain —
+every function stays a pure function of (seed, inputs), so neither D101
+nor T501 fires."""
+import numpy as np
+
+
+def make_rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _draw(rng, n):
+    return rng.integers(0, 10, size=n)
+
+
+def sample(seed, n):
+    return _draw(make_rng(seed), n)
