@@ -55,7 +55,7 @@ DEFAULT_POLICIES = ("ds2", "justin")
 def evaluate(queries=None, *, max_level: int = 2, seed: int = 3,
              verbose: bool = True, profile: str | None = None,
              windows: int = 8, policies=None,
-             reconfig_cost: str = "instant") -> dict:
+             reconfig_cost: str = "instant", tracer=None) -> dict:
     """One episode per (query, policy).  ``profile=None`` reproduces the
     paper's fixed-target protocol; a named profile ("ramp", "spike",
     "diurnal", "sinusoid", "step") runs the same comparison under a dynamic
@@ -78,7 +78,10 @@ def evaluate(queries=None, *, max_level: int = 2, seed: int = 3,
                 from repro.scenarios import run_scenario
                 res = run_scenario(policy, qname, profile, windows=windows,
                                    seed=seed, max_level=max_level,
-                                   reconfig_cost=reconfig_cost)
+                                   reconfig_cost=reconfig_cost,
+                                   tracer=tracer,
+                                   tenant=f"{qname}:{policy}"
+                                   if tracer is not None else "")
                 hist = res.history
                 s = res.summary()
             else:
@@ -92,7 +95,9 @@ def evaluate(queries=None, *, max_level: int = 2, seed: int = 3,
                     migration = MigrationRuntime(reconfig_cost)
                 ctl = AutoScaler(eng, TARGET_RATES[qname], cfg,
                                  policy=make_policy(policy, cfg),
-                                 migration=migration)
+                                 migration=migration, tracer=tracer)
+                if tracer is not None:
+                    ctl.tenant = f"{qname}:{policy}"
                 hist = ctl.run()
                 s = ctl.summary()
             s["wall_s"] = round(time.time() - t0, 1)
@@ -176,11 +181,25 @@ def main() -> None:
                     help="with --grid --admission: co-location fleet "
                          "driver (scalar = the reference oracle loop; "
                          "both are decision-identical)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="Fig. 5 episode mode only: record a deterministic "
+                         "span trace of every control-loop phase "
+                         "(repro.obs) and write it as JSONL to PATH; "
+                         "decisions are byte-identical with tracing on or "
+                         "off")
+    ap.add_argument("--trace-perfetto", default=None, metavar="PATH",
+                    help="like --trace but written in Chrome trace_event "
+                         "JSON — load PATH in Perfetto / chrome://tracing "
+                         "(both flags may be combined: one tracer, two "
+                         "exports)")
     ap.add_argument("--out", default=None,
                     help="output JSON (default: benchmarks/"
                          "nexmark_results.json, or nexmark_grid.json with "
                          "--grid — the two schemas differ)")
     args = ap.parse_args()
+    if args.grid and (args.trace or args.trace_perfetto):
+        ap.error("--trace/--trace-perfetto apply to the Fig. 5 episode, "
+                 "not --grid")
     if args.grid and args.profile is not None:
         ap.error("--profile applies to the Fig. 5 episode; with --grid "
                  "use --grid-profiles to restrict the profile set")
@@ -218,10 +237,27 @@ def main() -> None:
                        driver=args.driver)
         print(grid_markdown(res))
     else:
+        tracer = None
+        if args.trace or args.trace_perfetto:
+            from repro.obs import Tracer
+            tracer = Tracer(enabled=True)
         res = evaluate(args.queries, max_level=args.max_level,
                        profile=args.profile, windows=args.windows,
                        seed=args.seed, policies=args.policies,
-                       reconfig_cost=args.reconfig_cost)
+                       reconfig_cost=args.reconfig_cost, tracer=tracer)
+        if tracer is not None:
+            from repro.obs import write_chrome, write_jsonl
+            meta = {"seed": args.seed, "max_level": args.max_level,
+                    "profile": args.profile,
+                    "queries": args.queries or sorted(QUERIES),
+                    "policies": list(args.policies or DEFAULT_POLICIES)}
+            if args.trace:
+                write_jsonl(tracer.spans, args.trace, meta=meta)
+                print(f"wrote {args.trace} ({len(tracer.spans)} spans)")
+            if args.trace_perfetto:
+                write_chrome(tracer.spans, args.trace_perfetto, meta=meta)
+                print(f"wrote {args.trace_perfetto} "
+                      f"({len(tracer.spans)} spans, trace_event)")
     with open(args.out, "w") as f:
         json.dump(res, f, indent=1, default=float)
     print(f"wrote {args.out}")

@@ -100,7 +100,9 @@ def main() -> None:
     ap.add_argument("--out", default="benchmarks/hillclimb_results.json")
     args = ap.parse_args()
 
-    mesh = make_production_mesh(multi_pod=False)
+    from repro.obs import MetricsRegistry
+    reg = MetricsRegistry()   # one clock path (same registry the
+    mesh = make_production_mesh(multi_pod=False)   # bench suite times on)
     mctx = MeshCtx(mesh)
     rows = []
     for name, arch, shape, overrides, hypothesis in ITERATIONS:
@@ -108,9 +110,10 @@ def main() -> None:
             continue
         cfg = get_config(arch).replace(**overrides)
         try:
-            rec = analyze_cell(arch, shape, mctx, cfg_override=cfg)
+            with reg.timer(f"hillclimb.{name}") as tm:
+                rec = analyze_cell(arch, shape, mctx, cfg_override=cfg)
             rec.update(iteration=name, overrides=overrides,
-                       hypothesis=hypothesis)
+                       hypothesis=hypothesis, wall_s=round(tm.s, 4))
             rows.append(rec)
             print(f"{name:16s} comp={rec['t_compute_s']*1e3:9.2f}ms "
                   f"mem={rec['t_memory_s']*1e3:9.2f}ms "

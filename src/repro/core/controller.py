@@ -56,6 +56,10 @@ from repro.core.placement import (TaskRequest, placement_for_config,
                                   placement_requests)
 from repro.core.policy import ScalingPolicy, make_policy
 from repro.core.units import mem_exceeds
+from repro.obs.provenance import (REASON_DENIED, REASON_RECONFIGURED,
+                                  REASON_STEADY, REASON_TRIGGERED,
+                                  explain_admission, reason_counts)
+from repro.obs.trace import NULL_TRACER
 from repro.streaming.engine import StreamEngine
 
 
@@ -97,13 +101,18 @@ class HistoryRow:
                                       # runtime; 0 under "instant")
     moved_mb: float = 0.0             # state MB that physically travelled
                                       # for this window's reconfiguration
+    reason: str = REASON_STEADY       # why the window ended this way
+                                      # (repro.obs.provenance.REASONS);
+                                      # the fleet drivers upgrade
+                                      # denied -> deferred and mark
+                                      # preemption victims "shrunk"
 
 
 class AutoScaler:
     def __init__(self, engine: StreamEngine, target_rate: float,
                  cfg: ControllerConfig = ControllerConfig(),
                  *, admission=None, policy: ScalingPolicy | None = None,
-                 migration=None):
+                 migration=None, tracer=None):
         self.engine = engine
         self.flow = engine.flow
         self.target = target_rate
@@ -140,6 +149,14 @@ class AutoScaler:
         # default, and the scalar oracle) recomputes every quote.
         self.quote_cache: dict | None = None
         self._last_metrics: dict[str, dict] = {}
+        # optional deterministic span tracer (repro.obs.trace): spans are
+        # stamped with SIM time only, and the shared NULL_TRACER default
+        # makes every record an O(1) no-op — decisions are byte-identical
+        # with tracing on or off (pinned by tests/test_obs.py)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        # per-operator (flushes, compactions) marks for the LSM window
+        # spans — observability bookkeeping only, never read by decisions
+        self._lsm_marks: dict[str, tuple[int, int]] = {}
 
     # ------------------------------------------------------------------ core
     def _window_s(self) -> float:
@@ -208,7 +225,9 @@ class AutoScaler:
         prop = self.policy.propose_shrink(self.flow, self.cfg)
         if prop is None or prop.config == self.flow.config():
             return None
+        old_config = self.flow.config()
         self.policy.commit(self._last_metrics)
+        t0 = self.engine.now
         cost = self._enact(prop.config)
         if cost is not None and self.history:
             # the give-back's price lands on the victim's current window
@@ -216,9 +235,16 @@ class AutoScaler:
             row.reconfig_downtime += cost.downtime_s
             row.moved_mb += cost.moved_mb
         self.preemptions += 1
-        return self.resources()
+        out = self.resources()
+        self.tracer.record(
+            "preempt.shrink", "preempt", t0, self.engine.now,
+            tenant=self.tenant,
+            args={"old": {op: list(pc) for op, pc in old_config.items()},
+                  "new": {op: list(pc) for op, pc in prop.config.items()},
+                  "cpu_cores": out[0], "memory_mb": out[1]})
+        return out
 
-    def _enact(self, new_config: dict):
+    def _enact(self, new_config: dict, *, window: int | None = None):
         """Reconfigure + stabilize, pricing the re-shape through the
         migration runtime when one is attached: the planned downtime
         becomes PAUSED engine time (sources accrue backlog, nothing
@@ -233,14 +259,49 @@ class AutoScaler:
             cost = self.migration.charge(self, self.flow.config(),
                                          new_config)
         self.engine.reconfigure(new_config)
+        t0 = self.engine.now
         if cost is not None and cost.downtime_s > 0:
             self.engine.run_paused(
                 cost.downtime_s * self.cfg.sim_time_scale, self.target)
+            self.tracer.record(
+                "migration.paused", "migration", t0, self.engine.now,
+                tenant=self.tenant, window=window,
+                args={"downtime_s": cost.downtime_s,
+                      "moved_mb": cost.moved_mb})
+        t1 = self.engine.now
         # stabilization: run and discard one short window
         self.engine.run(self.cfg.stabilization_s * self.cfg.sim_time_scale,
                         self.target)
+        self.tracer.record("engine.stabilize", "engine", t1, self.engine.now,
+                         tenant=self.tenant, window=window)
         self.engine.collect()
         return cost
+
+    def _emit_lsm_spans(self, metrics: dict[str, dict], t0: float,
+                        t1: float, w: int) -> None:
+        """Per-stateful-operator storage span: the window's theta/tau plus
+        flush/compaction work since the last mark.  Marks live in
+        ``_lsm_marks`` (obs-only state); after a reconfigure the rebuilt
+        stores restart their totals, so deltas clamp at zero and the mark
+        re-baselines — never read by any decision."""
+        for name, m in metrics.items():
+            if not m["stateful"]:
+                continue
+            flushes = compactions = 0
+            for tr in self.engine.tasks[name]:
+                if tr.state is not None:
+                    f, c = tr.state.metrics.maintenance()
+                    flushes += f
+                    compactions += c
+            pf, pc = self._lsm_marks.get(name, (0, 0))
+            self._lsm_marks[name] = (flushes, compactions)
+            self.tracer.record(
+                "lsm.window", "lsm", t0, t1, tenant=self.tenant, window=w,
+                args={"op": name, "theta": m.get("theta"),
+                      "tau_ms": m.get("tau_ms"),
+                      "memory_level": m["memory_level"],
+                      "flushes": max(flushes - pf, 0),
+                      "compactions": max(compactions - pc, 0)})
 
     def step_window(self, w: int = 0, *, target_profile=None,
                     window_hook=None) -> bool:
@@ -252,7 +313,9 @@ class AutoScaler:
             self.target = float(target_profile(self.engine.now))
         if window_hook is not None:
             window_hook(self.engine, w)
+        t0 = self.engine.now
         self.engine.run(self._window_s(), self.target)
+        t_run = self.engine.now
         metrics = self.engine.collect()
         self._last_metrics = metrics
         src = sum(metrics[s]["rate_out"] for s in self.flow.sources())
@@ -267,11 +330,31 @@ class AutoScaler:
             target=self.target,
             backlog=sum(m["backlog"] for m in metrics.values()))
         self.history.append(row)
+        self.tracer.record("engine.window", "engine", t0, t_run,
+                         tenant=self.tenant, window=w,
+                         args={"target": self.target, "achieved_rate": src,
+                               "backlog": row.backlog, "cpu_cores": cpu,
+                               "memory_mb": mem})
+        if self.tracer.enabled:
+            self._emit_lsm_spans(metrics, t0, t_run, w)
+        self.tracer.record("policy.should_trigger", "policy", t_run, t_run,
+                         tenant=self.tenant, window=w,
+                         args={"triggered": trig, "steps": self.steps,
+                               "max_reconfigs": self.cfg.max_reconfigs})
         if not trig:
             return True
+        row.reason = REASON_TRIGGERED
         proposal = self.policy.propose(self.flow, metrics, self.target,
                                        self.cfg)
         new_config = proposal.config
+        if self.tracer.enabled:
+            args = {"config": {op: list(pc)
+                               for op, pc in new_config.items()},
+                    "changed": new_config != self.flow.config()}
+            if proposal.explain is not None:
+                args.update(proposal.explain.to_dict())
+            self.tracer.record("policy.propose", "policy", t_run, t_run,
+                             tenant=self.tenant, window=w, args=args)
         if new_config != self.flow.config():
             # quote against the shared placement when a shared-TM cluster
             # is attached: admission gates growth of the tenant's
@@ -288,15 +371,29 @@ class AutoScaler:
             # footprint must not be gated (and possibly denied) as a
             # scale-up
             grows = cpu_new > cpu_cur or mem_exceeds(mem_new, mem_cur)
-            if grows and self.admission is not None \
-                    and not self.admission(self, new_config,
-                                           cpu_new, mem_new):
+            admitted = None
+            if grows and self.admission is not None:
+                admitted = self.admission(self, new_config,
+                                          cpu_new, mem_new)
+            self.tracer.record(
+                "admission.quote", "admission", t_run, t_run,
+                tenant=self.tenant, window=w,
+                args=explain_admission(
+                    cpu_cur=cpu_cur, mem_cur=mem_cur, cpu_new=cpu_new,
+                    mem_new=mem_new, grows=grows, admitted=admitted,
+                    shared=shared is not None))
+            if admitted is False:
                 row.denied = True
+                row.reason = REASON_DENIED
                 return False        # retry at the next window boundary
         self.policy.commit(metrics)
+        self.tracer.record("policy.commit", "policy", t_run, t_run,
+                         tenant=self.tenant, window=w,
+                         args={"enacting": new_config != self.flow.config()})
         if new_config != self.flow.config():
             self.steps += 1
-            cost = self._enact(new_config)
+            cost = self._enact(new_config, window=w)
+            row.reason = REASON_RECONFIGURED
             if cost is not None:
                 row.reconfig_downtime = cost.downtime_s
                 row.moved_mb = cost.moved_mb
@@ -334,7 +431,8 @@ class AutoScaler:
                     "achieved_rate": 0.0, "target": self.target,
                     "cpu_cores": cpu, "memory_mb": mem,
                     "config": dict(self.flow.config()), "windows": 0,
-                    "reconfig_downtime_s": 0.0, "moved_mb": 0.0}
+                    "reconfig_downtime_s": 0.0, "moved_mb": 0.0,
+                    "reasons": {}}
         last = self.history[-1]
         return {"policy": self.policy.name, "steps": self.steps,
                 "achieved_rate": last.achieved_rate, "target": self.target,
@@ -343,4 +441,5 @@ class AutoScaler:
                 "windows": len(self.history),
                 "reconfig_downtime_s": sum(h.reconfig_downtime
                                            for h in self.history),
-                "moved_mb": sum(h.moved_mb for h in self.history)}
+                "moved_mb": sum(h.moved_mb for h in self.history),
+                "reasons": reason_counts(self.history)}

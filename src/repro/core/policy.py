@@ -44,6 +44,8 @@ from dataclasses import dataclass
 from repro.core import ds2 as _ds2
 from repro.core.justin import (JustinState, OperatorDecision,
                                commit as _justin_commit, justin_policy)
+from repro.obs.provenance import (Explain, explain_ds2, explain_justin,
+                                  explain_static, explain_threshold)
 
 # A configuration C^t: per-operator (parallelism, memory_level), where the
 # level is None (⊥) for operators holding no managed memory.
@@ -57,6 +59,11 @@ class Proposal:
     config: Config
     pending: object | None = None     # policy-private (e.g. Justin's
                                       # OperatorDecision map)
+    explain: Explain | None = None    # decision provenance: the signal
+                                      # values the proposal was computed
+                                      # from (repro.obs.provenance) —
+                                      # pure observation, never read back
+                                      # by the controller's decisions
 
 
 class ScalingPolicy:
@@ -178,7 +185,9 @@ class DS2Policy(ScalingPolicy):
                                      max_parallelism=cfg.max_parallelism)
         # memory is coupled to slots: level 0 everywhere (the engine maps
         # stateless operators to ⊥ at enactment)
-        self._last = Proposal({op: (p, 0) for op, p in ds2_p.items()})
+        self._last = Proposal(
+            {op: (p, 0) for op, p in ds2_p.items()},
+            explain=explain_ds2(metrics, ds2_p, target, cfg))
         return self._last
 
     def resources_config(self, config: Config) -> Config:
@@ -205,7 +214,9 @@ class JustinPolicy(ScalingPolicy):
         self._last = Proposal(
             {op: (d.parallelism, d.memory_level)
              for op, d in decisions.items()},
-            pending=decisions)
+            pending=decisions,
+            explain=explain_justin(metrics, ds2_p, decisions, self.state,
+                                   target, cfg.justin))
         return self._last
 
     def commit(self, metrics: dict[str, dict]) -> None:
@@ -236,7 +247,8 @@ class StaticPolicy(ScalingPolicy):
 
     def propose(self, flow, metrics, target, cfg) -> Proposal:
         self._last = Proposal({op: (m["parallelism"], m["memory_level"])
-                               for op, m in metrics.items()})
+                               for op, m in metrics.items()},
+                              explain=explain_static(metrics, target))
         return self._last
 
 
@@ -265,7 +277,9 @@ class ThresholdPolicy(ScalingPolicy):
             p = metrics[name]["parallelism"]
             out[name] = (min(math.ceil(p * self.scale_factor),
                              cfg.max_parallelism), 0)
-        self._last = Proposal(out)
+        self._last = Proposal(
+            out, explain=explain_threshold(flow, metrics, target, cfg,
+                                           self.scale_factor))
         return self._last
 
     def resources_config(self, config: Config) -> Config:

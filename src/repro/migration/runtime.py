@@ -98,6 +98,13 @@ class MigrationRuntime:
             t=scaler.engine.now, tenant=scaler.tenant,
             old_config=dict(old_config), new_config=dict(new_config),
             cost=cost, tasks_moved=plan.tasks_moved))
+        scaler.tracer.record(
+            "migration.charge", "migration", scaler.engine.now,
+            scaler.engine.now, tenant=scaler.tenant,
+            args={"mechanism": self.mechanism,
+                  "downtime_s": cost.downtime_s,
+                  "moved_mb": cost.moved_mb,
+                  "tasks_moved": plan.tasks_moved})
         return cost
 
     def totals(self) -> dict:

@@ -1,0 +1,26 @@
+"""Observability: deterministic tracing, decision provenance, metrics.
+
+Three pieces (PR 10):
+
+* :mod:`repro.obs.trace` — sim-time span tracer; ``NULL_TRACER`` is the
+  O(1) disabled default every control-loop hook falls back to.
+* :mod:`repro.obs.provenance` — ``Explain`` records (why a policy
+  proposed what it proposed) and the ``HistoryRow.reason`` enum.
+* :mod:`repro.obs.registry` — unified counters/gauges/histograms/timers
+  behind one ``snapshot()``.
+
+Exporters (JSONL + Chrome ``trace_event`` for Perfetto) live in
+:mod:`repro.obs.export`.  Determinism contract: docs/observability.md.
+"""
+from repro.obs.export import (chrome_trace, read_jsonl, write_chrome,
+                              write_jsonl)
+from repro.obs.provenance import (REASONS, Explain, explain_admission,
+                                  reason_counts)
+from repro.obs.registry import NULL_REGISTRY, MetricsRegistry
+from repro.obs.trace import CATS, NULL_TRACER, Span, Tracer
+
+__all__ = [
+    "CATS", "Explain", "MetricsRegistry", "NULL_REGISTRY", "NULL_TRACER",
+    "REASONS", "Span", "Tracer", "chrome_trace", "explain_admission",
+    "read_jsonl", "reason_counts", "write_chrome", "write_jsonl",
+]

@@ -89,6 +89,9 @@ from repro.core.placement import (MigrationCost, SharedPlacement,
 from repro.core.policy import make_policy
 from repro.core.units import MB_EPS, mem_close
 from repro.data.nexmark import QUERIES, TARGET_RATES
+from repro.obs.provenance import (REASON_DEFERRED, REASON_SHRUNK,
+                                  REASON_STEADY, REASON_TRIGGERED,
+                                  reason_counts)
 from repro.scenarios.faults import FaultSchedule
 from repro.scenarios.metrics import SLOReport, slo_report
 from repro.scenarios.profiles import Profile, make_profile
@@ -346,6 +349,7 @@ class ColocatedResult:
                 "denied_windows": list(t.denials),
                 "preempted_windows": list(t.preemptions),
                 "deferred_windows": list(t.deferrals),
+                "reasons": reason_counts(t.history),
                 "slo": t.slo(slack).to_dict(),
             } for t in self.tenants},
         }
@@ -445,7 +449,7 @@ def _desync_error(cluster: Cluster, t: TenantRun, cpu_now: int,
 
 def _setup_tenants(specs, cluster: Cluster, *, windows: int, seed: int,
                    base: ControllerConfig, warm: bool,
-                   cost_model) -> list[TenantRun]:
+                   cost_model, tracer=None) -> list[TenantRun]:
     from repro.migration import MigrationRuntime
     tenants: list[TenantRun] = []
     names: set[str] = set()
@@ -477,6 +481,8 @@ def _setup_tenants(specs, cluster: Cluster, *, windows: int, seed: int,
                             == "instant" else MigrationRuntime(cost_model))
         scaler.tenant = name
         scaler.cluster = cluster
+        if tracer is not None:
+            scaler.tracer = tracer
         tenants.append(TenantRun(spec=spec, name=name, scaler=scaler,
                                  profile=profile, faults=faults))
 
@@ -617,6 +623,12 @@ def _run_scalar(tenants: list[TenantRun], cluster: Cluster,
                         _t.denials.append(_w)
                         if _t.first_pending is None:
                             _t.first_pending = _w
+                        _t.scaler.tracer.record(
+                            "admission.defer", "admission",
+                            _t.scaler.engine.now, _t.scaler.engine.now,
+                            tenant=_t.name, window=_w,
+                            args={"quote_mb": quote_mb,
+                                  "budget_left_mb": budget_left})
                         return False
                 ok = _reserve(cluster, _t, new_config, cpu, mem)
                 if ok:
@@ -630,6 +642,12 @@ def _run_scalar(tenants: list[TenantRun], cluster: Cluster,
                         # give-backs moved state whether or not the
                         # request ultimately landed
                         budget_left -= spent
+                    _t.scaler.tracer.record(
+                        "admission.preempt", "admission",
+                        _t.scaler.engine.now, _t.scaler.engine.now,
+                        tenant=_t.name, window=_w,
+                        args={"admitted": ok, "spent_mb": spent,
+                              "blocked": blocked})
                     if ok:
                         return True
                     if blocked:
@@ -672,6 +690,14 @@ def _run_scalar(tenants: list[TenantRun], cluster: Cluster,
             row = t.history[-1]
             row.amortized_mb = att_start.get(t.name)
             row.preempted = w in t.preemptions
+            # provenance reasons the controller cannot see: a budget
+            # deferral upgrades this window's denial, and a preemption
+            # victim that did not itself reconfigure was "shrunk"
+            if t.deferrals and t.deferrals[-1] == w:
+                row.reason = REASON_DEFERRED
+            if row.preempted and row.reason in (REASON_STEADY,
+                                                REASON_TRIGGERED):
+                row.reason = REASON_SHRUNK
         result.usage.append((cluster.cpu_in_use, cluster.mem_in_use))
     return result
 
@@ -877,6 +903,12 @@ def _run_vectorized(tenants: list[TenantRun], cluster: Cluster,
                         fleet.denied[_w, _i] = True
                         if fleet.first_pending[_i] < 0:
                             fleet.first_pending[_i] = _w
+                        _t.scaler.tracer.record(
+                            "admission.defer", "admission",
+                            _t.scaler.engine.now, _t.scaler.engine.now,
+                            tenant=_t.name, window=_w,
+                            args={"quote_mb": quote_mb,
+                                  "budget_left_mb": budget_left})
                         return False
                 ok = _reserve(cluster, _t, new_config, cpu, mem)
                 if ok:
@@ -889,6 +921,12 @@ def _run_vectorized(tenants: list[TenantRun], cluster: Cluster,
                         _t, _i, new_config, cpu, mem, _w, budget_left)
                     if budget_left is not None:
                         budget_left -= spent
+                    _t.scaler.tracer.record(
+                        "admission.preempt", "admission",
+                        _t.scaler.engine.now, _t.scaler.engine.now,
+                        tenant=_t.name, window=_w,
+                        args={"admitted": ok, "spent_mb": spent,
+                              "blocked": blocked})
                     if ok:
                         fleet.set_footprint(_i)
                         return True
@@ -931,6 +969,14 @@ def _run_vectorized(tenants: list[TenantRun], cluster: Cluster,
             row = t.history[-1]
             row.amortized_mb = float(fleet.attributed[w, j])
             row.preempted = bool(fleet.preempted[w, j])
+            # provenance reasons the controller cannot see: a budget
+            # deferral upgrades this window's denial, and a preemption
+            # victim that did not itself reconfigure was "shrunk"
+            if fleet.deferred[w, j]:
+                row.reason = REASON_DEFERRED
+            if row.preempted and row.reason in (REASON_STEADY,
+                                                REASON_TRIGGERED):
+                row.reason = REASON_SHRUNK
         result.usage.append((cluster.cpu_in_use, cluster.mem_in_use))
 
     # fold the array flags back into the per-tenant lists the scalar API
@@ -952,7 +998,8 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
                   warm: bool = True,
                   reconfig_cost="instant",
                   migration_budget_mb: float | None = None,
-                  driver: str = "vectorized"
+                  driver: str = "vectorized",
+                  tracer=None
                   ) -> ColocatedResult:
     """Step every episode through ``windows`` decision windows in lockstep,
     arbitrating each window's scale-up requests against ``cluster``'s
@@ -991,6 +1038,12 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
     tenants as numpy array programs and scales to thousand-tenant
     fleets; ``"scalar"`` is the original per-tenant loop, kept as the
     decision-identical oracle.
+
+    ``tracer`` (a ``repro.obs.trace.Tracer``) is shared by every tenant's
+    controller: all window/policy/admission/migration spans land in one
+    stream, tagged per tenant.  Both drivers emit the same spans — the
+    per-tenant summary aggregates are equivalence-tested alongside the
+    decisions.
     """
     if admission not in ADMISSION_POLICIES:
         raise ValueError(f"unknown admission policy {admission!r} "
@@ -1005,7 +1058,8 @@ def run_colocated(specs: list[ColocatedSpec | tuple], cluster: Cluster,
              for s in specs]
     base = cfg or ControllerConfig(justin=JustinParams(max_level=max_level))
     tenants = _setup_tenants(specs, cluster, windows=windows, seed=seed,
-                             base=base, warm=warm, cost_model=cost_model)
+                             base=base, warm=warm, cost_model=cost_model,
+                             tracer=tracer)
     result = ColocatedResult(cluster=cluster, tenants=tenants,
                              admission=admission)
     run = _run_vectorized if driver == "vectorized" else _run_scalar

@@ -32,7 +32,7 @@ policy×profile evaluation grid.
 """
 from __future__ import annotations
 
-from dataclasses import asdict, dataclass
+from dataclasses import asdict, dataclass, field
 
 DEFAULT_SLACK = 0.97      # the paper's "supports the target rate" criterion
 
@@ -185,6 +185,12 @@ class SLOReport:
     downtime_s: float                # total paused paper-seconds
     moved_mb: float                  # state-moved integral across windows
     slack: float
+    violations_by_reason: dict = field(default_factory=dict)
+                                     # violating windows grouped by their
+                                     # HistoryRow.reason (obs.provenance
+                                     # enum): was the SLO missed while
+                                     # steady, denied, deferred, shrunk,
+                                     # or mid-reconfiguration?
 
     def to_dict(self) -> dict:
         d = asdict(self)
@@ -198,6 +204,10 @@ def slo_report(history: list, slack: float = DEFAULT_SLACK,
     bad = violation_windows(history, slack)
     cpu_w, mb_w = resource_integrals(history)
     down_w, down_s, moved = reconfig_cost_totals(history)
+    by_reason: dict[str, int] = {}
+    for i in bad:
+        r = getattr(history[i], "reason", "steady")
+        by_reason[r] = by_reason.get(r, 0) + 1
     last = history[-1] if history else None
     return SLOReport(
         windows=len(history),
@@ -216,4 +226,5 @@ def slo_report(history: list, slack: float = DEFAULT_SLACK,
         downtime_windows=down_w,
         downtime_s=down_s,
         moved_mb=moved,
-        slack=slack)
+        slack=slack,
+        violations_by_reason={k: by_reason[k] for k in sorted(by_reason)})

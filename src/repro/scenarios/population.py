@@ -222,7 +222,8 @@ def run_fleet(tenants: int = 1000, windows: int = 100, *,
               spec: PopulationSpec | None = None,
               cfg: ControllerConfig | None = None,
               slots_factor: float = 1.1,
-              mem_factor: float = 1.01) -> ColocatedResult:
+              mem_factor: float = 1.01,
+              tracer=None) -> ColocatedResult:
     """Sample a population, size its cluster, run the fleet driver."""
     cfg = cfg or fleet_cfg()
     spec = spec or PopulationSpec(tenants=tenants, seed=seed)
@@ -231,7 +232,8 @@ def run_fleet(tenants: int = 1000, windows: int = 100, *,
                            mem_factor=mem_factor)
     return run_colocated(specs, cluster, windows=windows, seed=seed,
                          cfg=cfg, admission=admission, driver=driver,
-                         migration_budget_mb=migration_budget_mb)
+                         migration_budget_mb=migration_budget_mb,
+                         tracer=tracer)
 
 
 def fleet_stats(result: ColocatedResult,

@@ -67,7 +67,8 @@ def run_scenario(policy: str, query: str, profile: Profile | str,
                  windows: int = 8, seed: int = 3, max_level: int = 2,
                  cfg: ControllerConfig | None = None,
                  warm: bool = True,
-                 reconfig_cost="instant") -> ScenarioResult:
+                 reconfig_cost="instant",
+                 tracer=None, tenant: str = "") -> ScenarioResult:
     """Drive ``policy`` (any registered name — see
     ``repro.core.policy.available_policies()``) on Nexmark ``query`` under
     a time-varying ``profile`` (a :class:`Profile` or a named shape from
@@ -99,7 +100,9 @@ def run_scenario(policy: str, query: str, profile: Profile | str,
         else MigrationRuntime(cost_model)
     scaler = AutoScaler(engine, profile(0.0), cfg,
                         policy=make_policy(policy, cfg),
-                        migration=migration)
+                        migration=migration, tracer=tracer)
+    if tenant:
+        scaler.tenant = tenant
     fired: list = []
 
     def hook(eng, w):

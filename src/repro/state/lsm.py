@@ -158,6 +158,12 @@ class LSMMetrics:
         return (self.reads, self.writes, self.cache_hits, self.cache_misses,
                 self.level_probes, self.access_latency_total_ms)
 
+    def maintenance(self) -> tuple[int, int]:
+        """(flushes, compactions) — the background-work counters
+        ``counters()`` deliberately omits from the hot-path view; the
+        observability layer reads them for per-window LSM spans."""
+        return (self.flushes, self.compactions)
+
     def reset(self) -> None:
         for k in self.__dict__:
             setattr(self, k, 0 if not k.startswith("access") else 0.0)

@@ -147,3 +147,30 @@ def test_fleet_contends_at_default_sizing():
     st = fleet_stats(res)
     assert st["denied_tenant_windows"] > 0
     assert st["preempted_tenant_windows"] > 0
+
+
+# ------------------------------------------------- trace-summary identity
+def test_drivers_emit_identical_trace_summaries():
+    """Observability satellite: with a live tracer attached, the
+    vectorized driver's per-tenant span aggregates (count and sim-time
+    per tenant|cat|name) are identical to the scalar oracle's — tracing
+    covers the fast path with the same fidelity as the slow one."""
+    from repro.obs import Tracer
+    cfg = fleet_cfg()
+    pop = sample_population(PopulationSpec(tenants=12, seed=23),
+                            scenario_horizon_s(cfg, 4))
+    summaries = {}
+    for driver in ("vectorized", "scalar"):
+        cluster = size_cluster(pop, cfg)
+        tr = Tracer(enabled=True)
+        run_colocated(pop, cluster, windows=4, cfg=cfg,
+                      admission="preemption", migration_budget_mb=1500.0,
+                      driver=driver, tracer=tr)
+        assert tr.spans, driver
+        summaries[driver] = tr.summary()
+    assert summaries["vectorized"] == summaries["scalar"]
+    # the fleet trace actually covers every tenant and the control phases
+    tenants = {k.split("|")[0] for k in summaries["scalar"]}
+    assert len(tenants) == 12
+    cats = {k.split("|")[1] for k in summaries["scalar"]}
+    assert {"engine", "policy", "lsm"} <= cats

@@ -228,6 +228,63 @@ def test_taint_pass_flags_cross_file_wall_clock_in_golden_module():
     assert "time.time" in findings[0].message
 
 
+# ------------------------------------------- T501 obs carve-out (PR 10)
+# The observability layer may read perf_counter for self-profiling; a
+# golden module calling into it as a DISCARDED statement must stay clean,
+# while a captured obs value — or the same shape outside src/repro/obs/ —
+# is still a finding.  See tools/lint/taint.py module docstring.
+
+OBS_TRACE = ("import time\n"
+             "def zz_span(name):\n"
+             "    time.perf_counter()\n")
+
+
+def test_taint_obs_scope_discarded_call_is_exempt():
+    # both a direct discarded call AND an indirect one through a local
+    # helper: the carve-out works at propagation level, so the helper
+    # itself never becomes tainted
+    units = [parse_source(OBS_TRACE, "src/repro/obs/zz_trace.py"),
+             parse_source(
+                 "from repro.obs.zz_trace import zz_span\n"
+                 "def _note():\n"
+                 "    zz_span('w')\n"
+                 "def stamp(batch):\n"
+                 "    _note()\n"
+                 "    zz_span('x')\n"
+                 "    return len(batch)\n",
+                 "src/repro/streaming/events.py")]
+    assert lint_units(units, all_rules({"T501"})).findings == []
+
+
+def test_taint_obs_scope_captured_value_still_flagged():
+    units = [parse_source(OBS_TRACE, "src/repro/obs/zz_trace.py"),
+             parse_source(
+                 "from repro.obs.zz_trace import zz_span\n"
+                 "def stamp(batch):\n"
+                 "    return zz_span('x')\n",
+                 "src/repro/streaming/events.py")]
+    findings = lint_units(units, all_rules({"T501"})).findings
+    assert [(f.path, f.rule) for f in findings] == \
+        [("src/repro/streaming/events.py", "T501")]
+    assert "time.perf_counter" in findings[0].message
+
+
+def test_taint_obs_scope_is_path_scoped_not_shape_scoped():
+    # the same write-only shape OUTSIDE src/repro/obs/ gets no carve-out:
+    # a discarded call can still have arbitrary side effects, only the
+    # audited obs package is trusted to be write-only
+    units = [parse_source(OBS_TRACE, "src/repro/core/zz_trace.py"),
+             parse_source(
+                 "from repro.core.zz_trace import zz_span\n"
+                 "def stamp(batch):\n"
+                 "    zz_span('x')\n"
+                 "    return len(batch)\n",
+                 "src/repro/streaming/events.py")]
+    findings = lint_units(units, all_rules({"T501"})).findings
+    assert [(f.path, f.rule) for f in findings] == \
+        [("src/repro/streaming/events.py", "T501")]
+
+
 def test_emit_only_restricts_reporting_not_analysis():
     # the --changed-only contract: the whole program is still analyzed
     # (the cross-file taint fact comes from core/zz_util), but findings are

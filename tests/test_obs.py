@@ -1,0 +1,375 @@
+"""Observability subsystem tests.
+
+Four contracts:
+
+* **Decision invariance** — attaching a live tracer to a golden episode
+  changes no decision: the full decision fingerprint (steps, trigger
+  sequence, every enacted config, final resources) is byte-identical
+  with tracing on and off.  This is the load-bearing guarantee that
+  lets CI record traces from the same episodes the goldens pin.
+* **Provenance** — every policy's proposals carry an ``Explain`` record
+  whose per-operator actions/signals describe the decision actually
+  made, admission verdicts carry their quote, and ``HistoryRow.reason``
+  / ``summary()["reasons"]`` / ``SLOReport.violations_by_reason`` agree
+  with the enum.
+* **Registry** — instruments behave, the disabled path is a shared
+  no-op, and ``absorb_engine`` / ``absorb_fleet`` expose the legacy
+  scattered totals behind one snapshot.
+* **Schema** — exported traces round-trip and pass the stdlib checker
+  (``tools/check_trace.py``), whose duplicated constants are pinned
+  equal to ``repro.obs``'s.
+"""
+import importlib.util
+import io
+import json
+import pathlib
+
+import pytest
+
+from repro.core.controller import AutoScaler, ControllerConfig
+from repro.core.justin import JustinParams
+from repro.core.policy import make_policy
+from repro.data.nexmark import QUERIES, TARGET_RATES
+from repro.obs import (CATS, MetricsRegistry, NULL_REGISTRY, NULL_TRACER,
+                       REASONS, Tracer, chrome_trace, read_jsonl,
+                       reason_counts, write_chrome, write_jsonl)
+from repro.obs.export import TRACE_KIND, TRACE_VERSION
+from repro.obs.registry import _NOOP
+from repro.scenarios.metrics import slo_report
+from repro.streaming.engine import StreamEngine
+
+REPO = pathlib.Path(__file__).parent.parent
+GOLDEN = json.loads((REPO / "tests/data/golden_autoscale.json").read_text())
+
+
+def _load_tool(name: str):
+    spec = importlib.util.spec_from_file_location(
+        name, REPO / "tools" / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+check_trace = _load_tool("check_trace")
+trace_report = _load_tool("trace_report")
+
+
+def run_episode(qname: str, policy: str, tracer=None,
+                max_windows: int | None = None):
+    """The golden episode protocol (tests/test_golden_trace.py), with an
+    optional tracer attached; returns (decision fingerprint, scaler)."""
+    meta = GOLDEN["_meta"]
+    eng = StreamEngine(QUERIES[qname](), seed=meta["seed"])
+    cfg = ControllerConfig(
+        policy=policy, justin=JustinParams(max_level=meta["max_level"]))
+    ctl = AutoScaler(eng, TARGET_RATES[qname], cfg,
+                     policy=make_policy(policy, cfg), tracer=tracer)
+    if max_windows is None:
+        hist = ctl.run()
+    else:
+        hist = ctl.run(max_windows=max_windows)
+    fingerprint = json.dumps({
+        "steps": ctl.steps,
+        "triggered": [h.triggered for h in hist],
+        "configs": [sorted((op, list(pc)) for op, pc in h.config.items())
+                    for h in hist],
+        "reasons": [h.reason for h in hist],
+        "cpu_cores": hist[-1].cpu_cores,
+        "memory_mb": hist[-1].memory_mb,
+    }, sort_keys=True)
+    return fingerprint, ctl
+
+
+# ------------------------------------------------------- decision invariance
+@pytest.mark.parametrize("key", ["q8_justin", "q11_justin", "q11_ds2"])
+def test_tracing_is_decision_invariant(key):
+    """The four golden episodes decide byte-identically with tracing on
+    and off — spans observe sim-time, they never steer."""
+    qname, policy = key.split("_")
+    off, _ = run_episode(qname, policy, tracer=None)
+    tr = Tracer(enabled=True)
+    on, _ = run_episode(qname, policy, tracer=tr)
+    assert on == off
+    assert tr.spans, "a live tracer on a golden episode must record spans"
+    assert {s.cat for s in tr.spans} <= set(CATS)
+    seqs = [s.seq for s in tr.spans]
+    assert seqs == list(range(len(seqs)))
+
+
+@pytest.mark.slow
+def test_tracing_is_decision_invariant_q8_ds2():
+    off, _ = run_episode("q8", "ds2", tracer=None)
+    on, _ = run_episode("q8", "ds2", tracer=Tracer(enabled=True))
+    assert on == off
+
+
+def test_disabled_tracer_records_nothing():
+    for tr in (Tracer(enabled=False), NULL_TRACER):
+        tr.record("engine.window", "engine", 0.0, 1.0)
+        assert tr.spans == []
+        assert tr.summary() == {}
+
+
+# --------------------------------------------------------------- provenance
+def _propose_spans(tracer):
+    return [s for s in tracer.spans if s.name == "policy.propose"]
+
+
+def _explain_of(span):
+    ops = span.args["operators"]
+    assert isinstance(ops, dict) and ops
+    for rec in ops.values():
+        assert set(rec) == {"action", "signals"}
+        assert isinstance(rec["signals"], dict)
+    return ops
+
+
+def test_explain_justin():
+    tr = Tracer(enabled=True)
+    run_episode("q8", "justin", tracer=tr)
+    spans = _propose_spans(tr)
+    assert spans
+    actions = set()
+    for s in spans:
+        assert s.args["policy"] == "justin"
+        assert set(s.args["thresholds"]) == {
+            "delta_theta", "delta_tau_ms", "max_level", "hysteresis"}
+        actions |= {r["action"] for r in _explain_of(s).values()}
+    known = {"hold", "rescale", "memory_scale_up_again", "rollback_memory",
+             "cancel_rescale_memory_up", "rescale_at_max_level"}
+    assert actions <= known
+    # the headline q8 trace exhibits Algorithm 1's hybrid branches
+    assert "cancel_rescale_memory_up" in actions
+    assert "rescale" in actions
+    # stateful operators expose the exact theta/tau observations
+    wj = [_explain_of(s)["window_join"]["signals"] for s in spans]
+    assert all("theta" in sig and "tau_ms" in sig
+               and "prev_scaled_up" in sig for sig in wj)
+
+
+def test_explain_ds2():
+    tr = Tracer(enabled=True)
+    run_episode("q11", "ds2", tracer=tr)
+    spans = _propose_spans(tr)
+    assert spans
+    actions = set()
+    for s in spans:
+        assert s.args["policy"] == "ds2"
+        assert set(s.args["thresholds"]) == {"target_busyness",
+                                             "max_parallelism"}
+        for rec in _explain_of(s).values():
+            actions.add(rec["action"])
+            assert "true_rate_per_task" in rec["signals"]
+            assert "ds2_parallelism" in rec["signals"]
+    assert actions <= {"scale_out", "scale_in", "hold"}
+    assert "scale_out" in actions
+
+
+def test_explain_static():
+    tr = Tracer(enabled=True)
+    run_episode("q11", "static", tracer=tr, max_windows=3)
+    for s in _propose_spans(tr):
+        assert s.args["policy"] == "static"
+        assert all(r["action"] == "hold"
+                   for r in _explain_of(s).values())
+
+
+def test_explain_threshold():
+    tr = Tracer(enabled=True)
+    run_episode("q11", "threshold", tracer=tr, max_windows=4)
+    spans = _propose_spans(tr)
+    assert spans
+    actions = set()
+    for s in spans:
+        assert s.args["policy"] == "threshold"
+        assert "busy_high" in s.args["thresholds"]
+        for rec in _explain_of(s).values():
+            actions.add(rec["action"])
+            assert "hot" in rec["signals"]
+    assert actions & {"scale_out", "scale_out_blamed_busiest"}
+
+
+def test_admission_quote_span():
+    tr = Tracer(enabled=True)
+    run_episode("q8", "justin", tracer=tr)
+    quotes = [s for s in tr.spans if s.name == "admission.quote"]
+    assert quotes
+    for q in quotes:
+        assert {"cpu_cur", "mem_cur", "cpu_new", "mem_new", "grows",
+                "admitted", "shared"} == set(q.args)
+    # single-tenant episodes never consult a cluster: admitted stays None
+    assert all(q.args["admitted"] is None for q in quotes)
+
+
+def test_reason_enum_and_summary():
+    _, ctl = run_episode("q8", "justin")
+    reasons = [h.reason for h in ctl.history]
+    assert set(reasons) <= set(REASONS)
+    assert "reconfigured" in reasons
+    counts = ctl.summary()["reasons"]
+    assert counts == reason_counts(ctl.history)
+    assert sum(counts.values()) == len(ctl.history)
+
+
+def test_slo_violations_by_reason():
+    _, ctl = run_episode("q8", "justin")
+    rep = slo_report(ctl.history)
+    assert sum(rep.violations_by_reason.values()) == rep.violations
+    assert set(rep.violations_by_reason) <= set(REASONS)
+    assert rep.to_dict()["violations_by_reason"] == rep.violations_by_reason
+
+
+# ----------------------------------------------------------------- registry
+def test_registry_instruments():
+    reg = MetricsRegistry()
+    reg.counter("a").inc()
+    reg.counter("a").inc(2)
+    reg.gauge("g").set(4.5)
+    reg.histogram("h").observe(1.0)
+    reg.histogram("h").observe(3.0)
+    with reg.timer("t"):
+        pass
+    snap = reg.snapshot()
+    assert snap["counters"] == {"a": 3}
+    assert snap["gauges"] == {"g": 4.5}
+    h = snap["histograms"]["h"]
+    assert (h["count"], h["min"], h["max"], h["mean"]) == (2, 1.0, 3.0, 2.0)
+    t = snap["timers"]["t"]
+    assert t["count"] == 1 and t["total_s"] >= 0.0
+    tm = reg.timer("t")
+    assert tm.s == tm.last_s and tm.us == pytest.approx(tm.s * 1e6)
+
+
+def test_registry_disabled_is_shared_noop():
+    assert NULL_REGISTRY.counter("x") is _NOOP
+    assert NULL_REGISTRY.timer("y") is _NOOP
+    with NULL_REGISTRY.timer("y") as t:
+        t.observe(1.0)
+    assert NULL_REGISTRY.snapshot() == {"counters": {}, "gauges": {},
+                                        "histograms": {}, "timers": {}}
+
+
+def test_registry_absorb_engine():
+    eng = StreamEngine(QUERIES["q8"](), seed=3)
+    eng.run(12.0, TARGET_RATES["q8"])
+    reg = MetricsRegistry()
+    reg.absorb_engine(eng, prefix="e")
+    gauges = reg.snapshot()["gauges"]
+    assert gauges["e.lsm.window_join.writes"] > 0
+    assert any(k.startswith("e.task.") and k.endswith(".cost_per_event")
+               for k in gauges)
+
+
+def test_registry_absorb_fleet():
+    from repro.scenarios.population import run_fleet
+    res = run_fleet(48, 10, admission="priority", seed=0)
+    reg = MetricsRegistry()
+    reg.absorb_fleet(res, prefix="f")
+    snap = reg.snapshot()
+    assert snap["counters"]["f.tenants"] == 48
+    assert snap["counters"]["f.policy_steps"] > 0
+    assert "f.moved_mb" in snap["gauges"]
+
+
+# ------------------------------------------------------------ trace schema
+def _small_trace():
+    tr = Tracer(enabled=True)
+    run_episode("q11", "justin", tracer=tr, max_windows=3)
+    return tr
+
+
+def test_jsonl_roundtrip_and_schema(tmp_path):
+    tr = _small_trace()
+    path = str(tmp_path / "t.jsonl")
+    write_jsonl(tr.spans, path, meta={"seed": 3})
+    header, spans = read_jsonl(path)
+    assert header["kind"] == TRACE_KIND
+    assert header["version"] == TRACE_VERSION and header["seed"] == 3
+    assert spans == [s.to_dict() for s in tr.spans]
+    lines = pathlib.Path(path).read_text().splitlines()
+    assert check_trace.check_jsonl(lines) == []
+    # the checker actually rejects drift
+    bad = json.loads(lines[1])
+    bad["cat"] = "mystery"
+    assert check_trace.check_jsonl([lines[0], json.dumps(bad)])
+    with pytest.raises(ValueError):
+        read_jsonl(_write(tmp_path, '{"kind": "other"}\n'))
+
+
+def _write(tmp_path, text):
+    p = tmp_path / "bad.jsonl"
+    p.write_text(text)
+    return str(p)
+
+
+def test_chrome_export_schema(tmp_path):
+    tr = _small_trace()
+    path = str(tmp_path / "t.json")
+    write_chrome(tr.spans, path, meta={"profile": "none"})
+    data = json.loads(pathlib.Path(path).read_text())
+    assert check_trace.check_chrome(data) == []
+    assert data == chrome_trace(tr.spans, meta={"profile": "none"})
+    names = [e["args"]["name"] for e in data["traceEvents"]
+             if e["ph"] == "M"]
+    assert "repro control loop" in names and "episode" in names
+    xs = [e for e in data["traceEvents"] if e["ph"] == "X"]
+    assert xs and all(e["dur"] >= 1.0 for e in xs)
+
+
+def test_checker_constants_pinned_to_repro_obs():
+    """tools/check_trace.py is stdlib-only by convention and duplicates
+    the schema constants; this pin keeps the copies from drifting."""
+    assert check_trace.TRACE_KIND == TRACE_KIND
+    assert check_trace.TRACE_VERSION == TRACE_VERSION
+    assert tuple(check_trace.CATS) == tuple(CATS)
+
+
+def test_committed_example_trace_is_valid():
+    """docs/traces/q8_justin.trace.json must load in Perfetto: same
+    schema gate CI applies."""
+    path = REPO / "docs" / "traces" / "q8_justin.trace.json"
+    data = json.loads(path.read_text())
+    assert check_trace.check_chrome(data) == []
+
+
+# ------------------------------------------------------------- trace report
+def test_trace_report_answers_why():
+    """The acceptance question: why did window 1 of q8-justin
+    reconfigure?  The report names the Algorithm-1 action and the exact
+    theta/tau signals it fired on."""
+    tr = Tracer(enabled=True)
+    run_episode("q8", "justin", tracer=tr)
+    out = io.StringIO()
+    shown = trace_report.render([s.to_dict() for s in tr.spans],
+                                window=1, out=out)
+    text = out.getvalue()
+    assert shown > 0
+    assert "== window 1 ==" in text
+    assert "policy.propose" in text and "thresholds:" in text
+    sig = next(s.args["operators"]["window_join"]["signals"]
+               for s in tr.spans
+               if s.name == "policy.propose" and s.window == 1)
+    act = next(s.args["operators"]["window_join"]["action"]
+               for s in tr.spans
+               if s.name == "policy.propose" and s.window == 1)
+    assert f"window_join: {act}" in text
+    assert f"theta={sig['theta']:.6g}" in text
+    assert f"tau_ms={sig['tau_ms']:.6g}" in text
+
+
+def test_trace_report_tenant_filter():
+    tr = _small_trace()
+    spans = [s.to_dict() for s in tr.spans]
+    assert trace_report.render(spans, tenant="no-such-tenant",
+                               out=io.StringIO()) == 0
+    assert trace_report.render(spans, tenant="", out=io.StringIO()) \
+        == len(spans)
+
+
+def test_tracer_summary_aggregates():
+    tr = _small_trace()
+    summ = tr.summary()
+    assert summ
+    key = next(k for k in summ if k.endswith("|engine|engine.window"))
+    assert summ[key]["count"] >= 3
+    assert summ[key]["sim_s"] > 0

@@ -26,8 +26,9 @@ SUITES = {
     "tests/test_kernels.py": 1,
     "tests/test_lsm_differential.py": 200,
     "tests/test_kernel_parity.py": 1,
-    "tests/test_lint.py": 38,
+    "tests/test_lint.py": 43,
     "tests/test_packed_key_bounds.py": 14,
+    "tests/test_obs.py": 22,
 }
 
 

@@ -1,0 +1,183 @@
+#!/usr/bin/env python
+"""Schema check for recorded control-loop traces.
+
+Two formats (``repro.obs.export`` writes both):
+
+* JSONL (default) — a ``{"kind": "repro-trace", "version": 1}`` header
+  line followed by one span dict per line.  Spans must carry exactly the
+  ``Span.to_dict`` keys, use a known category, keep ``t1 >= t0``, and
+  the ``seq`` stream must start at 0 and strictly increase — a trace
+  with a gap or a reset means two tracers were interleaved into one
+  file.
+* ``--chrome`` — Chrome ``trace_event`` JSON object format (what
+  Perfetto / chrome://tracing loads): a ``traceEvents`` list of
+  complete ("X") and metadata ("M") events plus the ``otherData``
+  provenance stamp.
+
+CI records a trace and runs this checker (plus the committed example
+under docs/traces/); schema drift fails the build instead of silently
+producing a trace Perfetto cannot open.
+
+    python tools/check_trace.py TRACE.jsonl
+    python tools/check_trace.py --chrome TRACE.json
+
+Stdlib-only on purpose (check_bench.py convention): the span categories
+and header tag are duplicated from ``repro.obs`` so the checker runs
+without PYTHONPATH.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# duplicated from repro.obs.{trace,export} — tests pin them equal
+TRACE_KIND = "repro-trace"
+TRACE_VERSION = 1
+CATS = ("window", "engine", "policy", "admission", "migration", "lsm",
+        "preempt")
+
+SPAN_KEYS = {
+    "seq": int,
+    "name": str,
+    "cat": str,
+    "t0": (int, float),
+    "t1": (int, float),
+    "tenant": str,
+    "window": (int, type(None)),
+    "args": dict,
+}
+
+
+def _typed(val, typ) -> bool:
+    return isinstance(val, typ) and not isinstance(val, bool)
+
+
+def check_span(span, i: int) -> list[str]:
+    if not isinstance(span, dict):
+        return [f"span[{i}] is not an object"]
+    errors = []
+    if set(span) != set(SPAN_KEYS):
+        errors.append(f"span[{i}] keys {sorted(span)} != "
+                      f"{sorted(SPAN_KEYS)}")
+        return errors
+    for key, typ in SPAN_KEYS.items():
+        if not _typed(span[key], typ):
+            errors.append(f"span[{i}][{key!r}] has type "
+                          f"{type(span[key]).__name__}")
+    if errors:
+        return errors
+    if not span["name"]:
+        errors.append(f"span[{i}] has an empty name")
+    if span["cat"] not in CATS:
+        errors.append(f"span[{i}] cat {span['cat']!r} not in {CATS}")
+    if span["t1"] < span["t0"]:
+        errors.append(f"span[{i}] t1 < t0 ({span['t1']} < {span['t0']})")
+    return errors
+
+
+def check_jsonl(lines: list[str]) -> list[str]:
+    if not lines:
+        return ["empty trace"]
+    try:
+        header = json.loads(lines[0])
+    except json.JSONDecodeError as e:
+        return [f"header is not JSON: {e}"]
+    if not isinstance(header, dict) or header.get("kind") != TRACE_KIND:
+        return [f"header kind != {TRACE_KIND!r}"]
+    errors = []
+    if header.get("version") != TRACE_VERSION:
+        errors.append(f"header version != {TRACE_VERSION}: "
+                      f"{header.get('version')!r}")
+    prev_seq = -1
+    for i, line in enumerate(lines[1:]):
+        try:
+            span = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"span[{i}] is not JSON: {e}")
+            continue
+        span_errors = check_span(span, i)
+        errors += span_errors
+        if span_errors:
+            continue
+        if span["seq"] != prev_seq + 1:
+            errors.append(f"span[{i}] seq {span['seq']} != {prev_seq + 1} "
+                          "(one tracer per file: seq starts at 0 and "
+                          "increments by 1)")
+        prev_seq = span["seq"]
+    return errors
+
+
+def check_chrome(data) -> list[str]:
+    if not isinstance(data, dict):
+        return ["top level is not an object"]
+    errors = []
+    other = data.get("otherData")
+    if not isinstance(other, dict) or other.get("kind") != TRACE_KIND:
+        errors.append(f"otherData.kind != {TRACE_KIND!r}")
+    elif other.get("version") != TRACE_VERSION:
+        errors.append(f"otherData.version != {TRACE_VERSION}")
+    events = data.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return errors + ["traceEvents is not a non-empty list"]
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"traceEvents[{i}] is not an object")
+            continue
+        ph = ev.get("ph")
+        if ph == "M":
+            if ev.get("name") not in ("process_name", "thread_name") \
+                    or not isinstance(ev.get("args"), dict) \
+                    or not isinstance(ev["args"].get("name"), str):
+                errors.append(f"traceEvents[{i}] malformed metadata event")
+        elif ph == "X":
+            if not (isinstance(ev.get("name"), str) and ev["name"]
+                    and ev.get("cat") in CATS
+                    and _typed(ev.get("ts"), (int, float))
+                    and _typed(ev.get("dur"), (int, float))
+                    and ev["dur"] > 0
+                    and _typed(ev.get("pid"), int)
+                    and _typed(ev.get("tid"), int)
+                    and isinstance(ev.get("args"), dict)):
+                errors.append(f"traceEvents[{i}] malformed complete event")
+        else:
+            errors.append(f"traceEvents[{i}] unknown ph {ph!r} "
+                          "(want X or M)")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="trace file to validate")
+    ap.add_argument("--chrome", action="store_true",
+                    help="validate Chrome trace_event JSON instead of "
+                         "the JSONL span schema")
+    args = ap.parse_args()
+    try:
+        with open(args.trace) as f:
+            text = f.read()
+    except OSError as e:
+        print(f"check_trace: cannot read {args.trace}: {e}")
+        return 1
+    if args.chrome:
+        try:
+            data = json.loads(text)
+        except json.JSONDecodeError as e:
+            print(f"check_trace: {args.trace}: not JSON: {e}")
+            return 1
+        errors = check_chrome(data)
+        n = len(data.get("traceEvents", [])) if isinstance(data, dict) else 0
+        what = f"{n} events, trace_event"
+    else:
+        lines = [ln for ln in text.splitlines() if ln.strip()]
+        errors = check_jsonl(lines)
+        what = f"{max(len(lines) - 1, 0)} spans, jsonl"
+    for e in errors:
+        print(f"check_trace: {args.trace}: {e}")
+    if not errors:
+        print(f"check_trace: {args.trace}: ok ({what})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

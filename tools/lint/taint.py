@@ -26,6 +26,20 @@ sink.  Fixture convention: paths outside ``src/repro/`` count as golden
 AND sim AND non-sim at once — the same full-panel convention the
 per-file rules use, which lets a single fixture file exercise an
 inherently cross-file property.
+
+**The observability carve-out.**  The obs layer (``src/repro/obs/``) may
+read ``time.perf_counter`` to price its own overhead
+(``Tracer.self_profile``, registry ``Timer``).  That is a *write-only*
+side channel: a golden function calling ``self.tracer.record(...)`` as a
+bare statement throws the result away, so no clock value can flow back
+into a decision.  T501 therefore refuses to propagate taint across a
+call site when (a) every tainted target lives under ``src/repro/obs/``
+AND (b) the call's value is discarded (the call is the whole of an
+``ast.Expr`` statement).  This is scoped at the *propagation* level, not
+a blanket module exemption: an obs value that IS captured
+(``x = tracer.record(...)``, ``if registry.timer(...)``) still taints the
+caller and is reported — the proof obligation stays "no obs value
+reaches a golden decision", checked per edge.
 """
 from __future__ import annotations
 
@@ -53,6 +67,37 @@ def _sim(relpath: str) -> bool:
 
 def _non_sim(relpath: str) -> bool:
     return _fixture(relpath) or not relpath.startswith(SIM_SCOPE)
+
+
+OBS_SCOPE = "src/repro/obs/"
+
+
+def _obs(relpath: str) -> bool:
+    """Is this file part of the write-only observability layer?  NOT
+    fixture-widened: the carve-out must only ever apply to the real obs
+    package (a test fixture opts in by using an ``src/repro/obs/``
+    pretend path)."""
+    return relpath.startswith(OBS_SCOPE)
+
+
+def _discarded(cg: CallGraph, site: CallSite) -> bool:
+    """True when the call's value is thrown away — the call expression is
+    the whole of an ``ast.Expr`` statement in its caller's body (module
+    body for the synthetic ``<module>`` function)."""
+    fn = cg.nodes[site.caller].node
+    tree = fn if fn is not None else cg.unit_of[site.caller].tree
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Expr) and node.value is site.call:
+            return True
+    return False
+
+
+def _obs_exempt(cg: CallGraph, site: CallSite, bad: list[str]) -> bool:
+    """The observability carve-out (module docstring): a *discarded* call
+    whose every tainted target lives in the obs layer cannot feed a clock
+    value back into a decision, so taint must not cross this edge."""
+    return all(_obs(cg.nodes[t].relpath) for t in bad) \
+        and _discarded(cg, site)
 
 
 def sink_label(site: CallSite) -> str | None:
@@ -108,13 +153,38 @@ class TaintReachability(Rule):
                 direct[site.caller] = lbl
         if not direct:
             return
-        tainted, parent = cg.reverse_closure(set(direct))
+        # site-level taint fixpoint rather than cg.reverse_closure:
+        # propagation must be able to REFUSE an edge (the obs carve-out
+        # needs the call *expression*, which the fid-level reverse graph
+        # has already erased).  Nested-def containment edges have no call
+        # site, so they propagate unconditionally, as before.
+        site_pairs = {(s.caller, t) for s in cg.sites for t in s.targets}
+        nested = sorted((o, t) for o, ts in cg.edges.items()
+                        for t in ts if (o, t) not in site_pairs)
+        tainted, parent = set(direct), {}
+        changed = True
+        while changed:
+            changed = False
+            for site in cg.sites:
+                if site.caller in tainted:
+                    continue
+                bad = sorted(t for t in site.targets if t in tainted)
+                if not bad or _obs_exempt(cg, site, bad):
+                    continue
+                tainted.add(site.caller)
+                parent[site.caller] = bad[0]
+                changed = True
+            for o, t in nested:
+                if o not in tainted and t in tainted:
+                    tainted.add(o)
+                    parent[o] = t
+                    changed = True
         for site in cg.sites:
             caller = cg.nodes[site.caller]
             if not _golden(caller.relpath):
                 continue
             bad = sorted(t for t in site.targets if t in tainted)
-            if not bad:
+            if not bad or _obs_exempt(cg, site, bad):
                 continue
             chain, sink = _sink_chain(cg, bad[0], parent, direct)
             unit = cg.unit_of[site.caller]

@@ -1,0 +1,159 @@
+#!/usr/bin/env python
+"""Render a control-loop trace as "why did window N do X".
+
+Two input modes:
+
+* ``--trace PATH`` — render a recorded JSONL trace
+  (``nexmark_eval.py --trace`` / ``run.py fleet --trace`` wrote it);
+* ``--episode QUERY --policy NAME`` — re-run that Fig. 5 episode with
+  tracing enabled (same protocol the golden traces pin: seed and
+  max_level come from ``tests/data/golden_autoscale.json`` when the
+  episode is a golden one) and render the result.  Needs
+  ``PYTHONPATH=src``.
+
+For every decision window the report shows the engine observation, the
+trigger verdict, the proposal's :class:`~repro.obs.provenance.Explain`
+record — per-operator action plus the exact signal values it was
+computed from, against the policy's thresholds — and the admission
+verdict.  ``--window N`` narrows to one window, ``--tenant SUB`` to
+tenants containing SUB (fleet traces tag spans per tenant).
+
+    PYTHONPATH=src python tools/trace_report.py --episode q8 --policy justin --window 1
+    PYTHONPATH=src python tools/trace_report.py --trace fleet.trace.jsonl --tenant a17
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def _kv(args: dict, skip=()) -> str:
+    return "  ".join(f"{k}={_fmt(v)}" for k, v in args.items()
+                     if k not in skip and v is not None)
+
+
+def _render_propose(span: dict, out) -> None:
+    args = span["args"]
+    head = _kv(args, skip=("config", "thresholds", "operators"))
+    print(f"  policy.propose        {head}", file=out)
+    if args.get("thresholds"):
+        print(f"      thresholds: {_kv(args['thresholds'])}", file=out)
+    config = args.get("config") or {}
+    for op, rec in (args.get("operators") or {}).items():
+        tgt = config.get(op)
+        to = f" -> (p={tgt[0]}, level={tgt[1]})" if tgt else ""
+        print(f"      {op}: {rec['action']}{to}", file=out)
+        sig = rec.get("signals") or {}
+        print(f"          {_kv(sig)}", file=out)
+
+
+def _render_span(span: dict, out) -> None:
+    name = span["name"]
+    if name == "policy.propose":
+        _render_propose(span, out)
+        return
+    pad = f"  {name:<20s}"
+    dur = span["t1"] - span["t0"]
+    tspan = f"t={span['t0']:.6g}..{span['t1']:.6g}s" if dur else ""
+    line = "  ".join(x for x in (pad.rstrip().ljust(22), tspan,
+                                 _kv(span["args"])) if x)
+    print(line, file=out)
+
+
+def render(spans: list[dict], *, window: int | None = None,
+           tenant: str | None = None, out=sys.stdout) -> int:
+    """Print the report; returns the number of spans rendered."""
+    shown = 0
+    current = object()
+    for s in spans:
+        if tenant is not None and tenant not in s["tenant"]:
+            continue
+        if window is not None and s["window"] != window:
+            continue
+        key = (s["tenant"], s["window"])
+        if key != current:
+            current = key
+            where = f"window {s['window']}" if s["window"] is not None \
+                else "(no window)"
+            who = f"  tenant {s['tenant']}" if s["tenant"] else ""
+            print(f"== {where}{who} ==", file=out)
+        _render_span(s, out)
+        shown += 1
+    return shown
+
+
+def _golden_meta() -> dict:
+    try:
+        with open("tests/data/golden_autoscale.json") as f:
+            return json.load(f).get("_meta", {})
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def _episode_spans(query: str, policy: str) -> list[dict]:
+    """Re-run one Fig. 5 episode with tracing on (golden protocol)."""
+    from repro.core.controller import AutoScaler, ControllerConfig
+    from repro.core.justin import JustinParams
+    from repro.core.policy import make_policy
+    from repro.data.nexmark import QUERIES, TARGET_RATES
+    from repro.obs import Tracer
+    from repro.streaming.engine import StreamEngine
+    meta = _golden_meta()
+    seed = int(meta.get("seed", 3))
+    max_level = int(meta.get("max_level", 2))
+    eng = StreamEngine(QUERIES[query](), seed=seed)
+    cfg = ControllerConfig(policy=policy,
+                           justin=JustinParams(max_level=max_level))
+    tracer = Tracer(enabled=True)
+    ctl = AutoScaler(eng, TARGET_RATES[query], cfg,
+                     policy=make_policy(policy, cfg), tracer=tracer)
+    ctl.tenant = f"{query}:{policy}"
+    ctl.run()
+    return [s.to_dict() for s in tracer.spans]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--trace", metavar="PATH",
+                     help="recorded JSONL trace to render")
+    src.add_argument("--episode", metavar="QUERY",
+                     help="re-run this Nexmark query's Fig. 5 episode "
+                          "with tracing enabled (needs PYTHONPATH=src)")
+    ap.add_argument("--policy", default="justin",
+                    help="policy for --episode (default: justin)")
+    ap.add_argument("--window", type=int, default=None,
+                    help="only this decision window")
+    ap.add_argument("--tenant", default=None,
+                    help="only tenants containing this substring")
+    args = ap.parse_args()
+    if args.trace:
+        from pathlib import Path
+        lines = [ln for ln in
+                 Path(args.trace).read_text().splitlines() if ln.strip()]
+        if not lines:
+            print(f"trace_report: {args.trace}: empty trace")
+            return 1
+        header = json.loads(lines[0])
+        if header.get("kind") != "repro-trace":
+            print(f"trace_report: {args.trace}: not a repro-trace file")
+            return 1
+        spans = [json.loads(ln) for ln in lines[1:]]
+    else:
+        spans = _episode_spans(args.episode, args.policy)
+    shown = render(spans, window=args.window, tenant=args.tenant)
+    if not shown:
+        print("trace_report: no spans matched the filter")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
